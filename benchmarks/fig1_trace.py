@@ -1,0 +1,53 @@
+"""Paper Fig. 1 — execution traces of vecadd under 4 lws values.
+
+Reproduces the paper's trace experiment on the analytic Vortex model:
+128-element vecadd on a 1-core, 2-warp, 4-thread GPU (hp=8), lws in
+{1, 16, 32, 64}.  Expected regimes (paper §2):
+
+  lws=1   oversubscribed — 16 sequential kernel calls;
+  lws=16  exact          — one call, full thread masks;
+  lws=32  undersubscribed — one call, half the warps idle;
+  lws=64  undersubscribed — one call, quarter occupancy.
+"""
+
+from repro.core.hw import VortexParams
+from repro.core.mapper import resolve_lws
+from repro.core.tracesim import simulate
+from repro.core.workload import vecadd
+
+
+def render_trace(res, width: int = 72) -> list[str]:
+    """ASCII wavefront view: one row per (core, warp), time left->right."""
+    t_max = max(e.t_end for e in res.events)
+    rows = {}
+    for e in res.events:
+        key = (e.core, e.warp)
+        rows.setdefault(key, [" "] * width)
+        a = int(e.t_start / t_max * (width - 1))
+        b = max(int(e.t_end / t_max * (width - 1)), a + 1)
+        ch = {"init": "i", "body": "#", "ret": "r"}[e.section]
+        if e.section == "body" and e.thread_mask < e.threads:
+            ch = "+"          # partial thread mask (paper's tmask plots)
+        for x in range(a, b):
+            rows[key][x] = ch
+    return [f"  c{c}w{w} |{''.join(r)}|" for (c, w), r in sorted(rows.items())]
+
+
+def run(print_fn=print):
+    w = vecadd(128)
+    cfg = VortexParams(cores=1, warps=2, threads=4)
+    print_fn(f"# Fig.1: vecadd gws={w.gws} on {cfg.tag} (hp={cfg.hp}), "
+             f"Eq.1 lws = {resolve_lws(w.gws, cfg.hp)}")
+    out = []
+    for lws in (1, 16, 32, 64):
+        res = simulate(w, cfg, lws, trace=True)
+        print_fn(f"lws={lws:<3d} calls={res.calls:<3d} cycles={res.cycles:<7d} "
+                 f"regime={res.regime.value:<16s} util={res.utilization:.3f}")
+        for line in render_trace(res):
+            print_fn(line)
+        out.append((lws, res.cycles, res.calls, res.regime.value))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Roofline table — renders experiments/dryrun/*/*.json (the compiled
+multi-pod dry-run records) into the §Roofline table of EXPERIMENTS.md."""
+
+import glob
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(mesh: str = "single"):
+    rows = []
+    for f in sorted(glob.glob(str(ROOT / mesh / "*.json"))):
+        r = json.loads(open(f).read())
+        if r.get("status") == "ok":
+            rows.append(r)
+    return rows
+
+
+def fmt(t):
+    return f"{t*1e3:9.2f}ms" if t < 10 else f"{t:9.2f}s "
+
+
+def run(print_fn=print, mesh: str = "single"):
+    rows = load(mesh)
+    if not rows:
+        print_fn(f"# no dry-run records for mesh={mesh}; run "
+                 "`python -m repro.launch.dryrun` first")
+        return []
+    print_fn(f"# Roofline ({mesh} mesh, {rows[0]['chips']} chips, "
+             "per-step seconds)")
+    print_fn(f"{'arch':<22s}{'shape':<13s}{'t_comp':>11s}{'t_mem':>11s}"
+             f"{'t_coll':>11s} {'dominant':<11s}{'useful':>7s}{'frac':>7s}"
+             f"{'fits':>6s}")
+    for r in rows:
+        print_fn(f"{r['arch']:<22s}{r['shape']:<13s}"
+                 f"{fmt(r['t_compute'])}{fmt(r['t_memory'])}"
+                 f"{fmt(r['t_collective'])} {r['dominant']:<11s}"
+                 f"{r['useful_flops_fraction']:7.2f}"
+                 f"{r['roofline_fraction']:7.3f}"
+                 f"{str(r.get('fits_hbm','?')):>6s}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(mesh=sys.argv[1] if len(sys.argv) > 1 else "single")

@@ -1,0 +1,61 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run
+
+Sections:
+  fig1   execution-trace regimes (paper Fig. 1)
+  fig2   450-config mapping-policy sweep (paper Fig. 2 + headline claims)
+  kern   Pallas kernel suite under the 3 policies (``name,us_per_call,derived``)
+  roof   roofline table from the dry-run records (single + multi mesh)
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import fig1_trace, fig2_sweep, kernel_bench, roofline_table
+
+    print("=" * 74)
+    print("== fig1_trace: Vortex execution regimes (paper Fig. 1)")
+    print("=" * 74)
+    fig1 = fig1_trace.run()
+    print("\nname,us_per_call,derived")
+    for lws, cycles, calls, regime in fig1:
+        print(f"fig1_vecadd_lws{lws},0.0,cycles={cycles};calls={calls};{regime}")
+
+    print()
+    print("=" * 74)
+    print("== fig2_sweep: 450-configuration mapping comparison (paper Fig. 2)")
+    print("=" * 74)
+    fig2 = fig2_sweep.run()
+    print("\nname,us_per_call,derived")
+    for name, s in fig2.items():
+        if name == "_summary":
+            continue
+        print(f"fig2_{name},0.0,naive_avg={s['naive_avg']:.2f};"
+              f"fixed_avg={s['fixed_avg']:.2f};fixed_max={s['fixed_max']:.1f}")
+    s = fig2["_summary"]
+    print(f"fig2_SUMMARY,0.0,naive_avg={s['naive_avg']:.2f}(paper1.3);"
+          f"fixed_avg={s['fixed_avg']:.2f}(paper3.7);"
+          f"tail={s['tail_max']:.1f}(paper~20)")
+
+    print()
+    print("=" * 74)
+    print("== kernel_bench: Pallas kernels x mapping policies (interpret)")
+    print("=" * 74)
+    print("name,us_per_call,derived")
+    kernel_bench.run()
+
+    print()
+    print("=" * 74)
+    print("== roofline: dry-run derived terms (see EXPERIMENTS.md)")
+    print("=" * 74)
+    for mesh in ("single", "multi"):
+        roofline_table.run(mesh=mesh)
+        print()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,16 @@
+"""Batched serving example: prefill + greedy decode over a mixed batch of
+prompts with ragged lengths (continuous-batching style pool).
+
+    PYTHONPATH=src python examples/serve_smollm.py
+"""
+
+import numpy as np
+
+from repro.launch.serve import serve_batch
+
+rng = np.random.default_rng(0)
+prompts = [list(rng.integers(1, 500, size=n)) for n in (5, 12, 3, 20)]
+stats = serve_batch("smollm-135m", prompts, max_new_tokens=12)
+for i, out in enumerate(stats.outputs):
+    print(f"req{i}: prompt={out[:len(prompts[i])]} -> "
+          f"generated={out[len(prompts[i]):]}")

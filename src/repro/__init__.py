@@ -1,0 +1,17 @@
+"""repro — a JAX/Pallas framework reproducing "Optimising GPGPU Execution
+Through Runtime Micro-Architecture Parameter Analysis" (Sarda et al., 2024)
+and extending it into a multi-pod TPU training/serving stack.
+
+Layers:
+  repro.core       the paper's runtime mapping technique (Eq. 1) + roofline
+  repro.kernels    Pallas TPU kernels with mapper-chosen BlockSpecs
+  repro.models     LM model zoo (dense / MoE / SSM / hybrid / enc-dec / VLM)
+  repro.data       deterministic sharded data pipeline
+  repro.optim      ZeRO-1 AdamW, schedules, accumulation, compression
+  repro.checkpoint sharded fault-tolerant checkpoints
+  repro.runtime    sharding rules, fault tolerance, stragglers
+  repro.configs    the 10 assigned architectures
+  repro.launch     mesh / dry-run / train / serve entry points
+"""
+
+__version__ = "1.0.0"

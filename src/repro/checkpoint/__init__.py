@@ -1,0 +1,3 @@
+"""repro.checkpoint — atomic, async, sharded, reshardable checkpoints."""
+from repro.checkpoint.ckpt import Checkpointer
+__all__ = ["Checkpointer"]

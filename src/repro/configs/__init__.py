@@ -1,0 +1,14 @@
+"""repro.configs — the 10 assigned architectures (+ shape cells).
+
+Importing this package populates the registry in ``configs.base``."""
+
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES, get_config,
+                                list_configs, cell_is_valid)
+from repro.configs import (  # noqa: F401  — registration side-effects
+    smollm_135m, gemma3_27b, qwen3_8b, nemotron_4_340b, zamba2_7b,
+    paligemma_3b, mamba2_1_3b, whisper_medium, deepseek_moe_16b,
+    qwen3_moe_235b_a22b,
+)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "get_config",
+           "list_configs", "cell_is_valid"]

@@ -1,0 +1,12 @@
+"""deepseek-moe-16b — fine-grained MoE, 2 shared + 64 routed top-6
+[arXiv:2401.06066]."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    num_layers=28, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1408, vocab_size=102400, head_dim=128,
+    moe_experts=64, moe_topk=6, moe_shared_experts=2, moe_dff=1408,
+    mlp_act="swiglu", tie_embeddings=False,
+    skip_shapes=("long_500k",),
+))

@@ -1,0 +1,13 @@
+"""gemma3-27b — dense, 5:1 local:global attention, 128k context
+[hf:google/gemma-3-1b-pt family]."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma3-27b", family="dense",
+    num_layers=62, d_model=5376, num_heads=32, num_kv_heads=16,
+    d_ff=21504, vocab_size=262144, head_dim=168,
+    mlp_act="geglu", rope_theta=1_000_000.0,
+    window=1024, local_global_ratio=5,   # 5 local layers per global
+    qk_norm=True, tie_embeddings=True,
+    # mostly-local attention -> long_500k decode is tractable (DESIGN §4.2)
+))

@@ -1,0 +1,11 @@
+"""mamba2-1.3b — attention-free SSD (state-space duality) [arXiv:2405.21060]."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-1.3b", family="ssm",
+    num_layers=48, d_model=2048, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_groups=1,
+    tie_embeddings=True,
+    # attention-free: all shapes incl. long_500k run
+))

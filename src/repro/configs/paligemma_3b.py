@@ -1,0 +1,14 @@
+"""paligemma-3b — SigLIP(stub) + gemma decoder VLM [arXiv:2407.07726].
+
+The SigLIP vision tower is a STUB per the assignment: ``input_specs()``
+supplies 256 precomputed patch embeddings as the prefix."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="paligemma-3b", family="vlm",
+    num_layers=18, d_model=2048, num_heads=8, num_kv_heads=1,
+    d_ff=16384, vocab_size=257216, head_dim=256,
+    mlp_act="geglu", rope_theta=10_000.0, tie_embeddings=True,
+    prefix_tokens=256,
+    skip_shapes=("long_500k",),
+))

@@ -1,0 +1,43 @@
+"""repro.core — runtime micro-architecture parameter analysis (the paper's
+contribution): hardware introspection, Eq. 1 mapping, trace simulation,
+roofline extraction, and the beyond-paper autotune refinement."""
+
+from repro.core.hw import TpuParams, VortexParams, TPU_REGISTRY, detect
+from repro.core.mapper import (
+    MappingPolicy,
+    Regime,
+    resolve_lws,
+    classify_regime,
+    BlockPlan,
+    MatmulPlan,
+    AttentionPlan,
+    MeshPlan,
+    plan_vector_blocks,
+    plan_matmul_blocks,
+    plan_attention_blocks,
+    plan_microbatch,
+    plan_moe_capacity,
+)
+from repro.core.workload import Workload, PAPER_KERNELS
+from repro.core.tracesim import simulate, simulate_policy, sweep_configs, paper_config_grid
+from repro.core.roofline import (
+    TPU_V5E,
+    RooflineReport,
+    collective_stats_from_hlo,
+    roofline_from_compiled,
+    model_flops_per_step,
+)
+from repro.core.autotune import refine_lws, refine_discrete
+
+__all__ = [
+    "TpuParams", "VortexParams", "TPU_REGISTRY", "detect",
+    "MappingPolicy", "Regime", "resolve_lws", "classify_regime",
+    "BlockPlan", "MatmulPlan", "AttentionPlan", "MeshPlan",
+    "plan_vector_blocks", "plan_matmul_blocks", "plan_attention_blocks",
+    "plan_microbatch", "plan_moe_capacity",
+    "Workload", "PAPER_KERNELS",
+    "simulate", "simulate_policy", "sweep_configs", "paper_config_grid",
+    "TPU_V5E", "RooflineReport", "collective_stats_from_hlo",
+    "roofline_from_compiled", "model_flops_per_step",
+    "refine_lws", "refine_discrete",
+]

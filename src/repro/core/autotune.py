@@ -1,0 +1,79 @@
+"""Beyond-paper extension: local search refinement around the Eq. 1 seed.
+
+The paper notes (§3) that "in a few specific hw configurations, spawning
+more or less warps can bring small benefits to the execution (because of
+e.g., reduced overhead, improved memory bandwidth utilization)" — i.e.
+Eq. 1 is near-optimal but not always exactly optimal.  We close that gap:
+``refine_lws`` hill-climbs the simulator (or any cost callable) over the
+x2 / /2 neighbourhood of the Eq. 1 seed.  Because the seed is already
+near-optimal the search terminates in a handful of probes — cheap enough
+to run inside the runtime mapper.
+
+The same machinery refines Pallas block plans using the roofline cost of a
+candidate block (compute/memory max) as the objective.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+from repro.core.hw import VortexParams
+from repro.core.mapper import resolve_lws
+from repro.core.tracesim import simulate
+from repro.core.workload import Workload
+
+__all__ = ["refine_lws", "RefineResult", "refine_discrete"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RefineResult:
+    seed: int
+    best: int
+    seed_cost: float
+    best_cost: float
+    probes: int
+
+    @property
+    def improvement(self) -> float:
+        return self.seed_cost / self.best_cost if self.best_cost else 1.0
+
+
+def refine_discrete(
+    seed: int,
+    cost_fn: Callable[[int], float],
+    candidates: Optional[Sequence[int]] = None,
+    max_probes: int = 16,
+) -> RefineResult:
+    """Greedy neighbourhood search over doubling/halving moves from ``seed``."""
+    if candidates is None:
+        cands = {seed}
+        v = seed
+        for _ in range(3):
+            v = max(1, v // 2)
+            cands.add(v)
+        v = seed
+        for _ in range(3):
+            v *= 2
+            cands.add(v)
+        candidates = sorted(cands)
+    seed_cost = cost_fn(seed)
+    best, best_cost, probes = seed, seed_cost, 1
+    for c in candidates:
+        if c == seed or probes >= max_probes:
+            continue
+        probes += 1
+        cost = cost_fn(c)
+        if cost < best_cost:
+            best, best_cost = c, cost
+    return RefineResult(seed=seed, best=best, seed_cost=seed_cost,
+                        best_cost=best_cost, probes=probes)
+
+
+def refine_lws(w: Workload, cfg: VortexParams, max_probes: int = 16) -> RefineResult:
+    """Refine Eq. 1's lws on the trace simulator (the 'small benefits' of §3)."""
+    seed = resolve_lws(w.gws, cfg.hp)
+    return refine_discrete(
+        seed, lambda lws: float(simulate(w, cfg, lws).cycles),
+        max_probes=max_probes,
+    )

@@ -1,0 +1,401 @@
+"""Analytic per-device cost model: FLOPs / HBM bytes / collective bytes /
+peak memory for every (arch x shape x plan) cell.
+
+Why analytic: two verified XLA-CPU artifacts make the compiled numbers
+unusable as-is for the roofline (tests/test_costmodel.py pins both):
+
+  1. ``cost_analysis()`` counts while-loop bodies ONCE — scan-over-layers,
+     microbatch accumulation and KV-chunk loops are undercounted by their
+     trip counts;
+  2. the CPU ``float-normalization-bf16`` pass rewrites bf16 loop state to
+     f32, inflating ``memory_analysis`` ~2x vs a TPU (native bf16).
+
+The model mirrors the *implementation* (full masked attention sweeps, sort
+-based MoE dispatch, remat recompute, FSDP re-gathers per microbatch), not
+an idealized machine — so its FLOPs are "HLO FLOPs", comparable against
+MODEL_FLOPS = 6·N·D to expose remat/dispatch waste.  It is validated
+against ``cost_analysis`` on loop-free (single-layer, single-microbatch,
+single-chunk) configurations where artifact #1 vanishes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+ATTN_CHUNK = 512          # models/attention.py chunk
+BWD_MATMUL_FACTOR = 2.0   # each fwd matmul has 2 bwd matmuls
+ATTN_BWD_FACTOR = 2.5     # flash bwd recompute + 4 grad matmuls vs 2 fwd
+MOE_SLACK = 1.25
+
+
+@dataclasses.dataclass
+class CellCost:
+    """All quantities are PER DEVICE PER STEP unless suffixed _global."""
+
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: dict[str, float] = dataclasses.field(default_factory=dict)
+    mem_bytes: dict[str, float] = dataclasses.field(default_factory=dict)
+    notes: list[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    @property
+    def peak_memory(self) -> float:
+        return sum(self.mem_bytes.values())
+
+    def add_coll(self, kind: str, b: float):
+        self.coll_bytes[kind] = self.coll_bytes.get(kind, 0.0) + b
+
+
+def _dtype_bytes(cfg: ModelConfig) -> int:
+    return 2 if cfg.dtype == "bfloat16" else 4
+
+
+def _attn_layer_flops_fwd(seq_q: float, seq_kv: float, heads: int,
+                          head_dim: int) -> float:
+    """Per-sequence flops of one attention layer's score+value matmuls —
+    FULL sweep (the implementation masks, it does not skip chunks)."""
+    return 4.0 * seq_q * seq_kv * heads * head_dim
+
+
+def _proj_flops_per_token(cfg: ModelConfig) -> float:
+    """fwd matmul flops per token through one decoder layer's projections."""
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = cfg.num_heads, max(cfg.num_kv_heads, 1)
+    attn = 2.0 * d * (h * hd) * 2 + 2.0 * d * (kv * hd) * 2 * 2
+    if cfg.family == "moe":
+        gates = 3 if cfg.mlp_act in ("swiglu", "geglu") else 2
+        mlp = 2.0 * d * cfg.moe_dff * gates * (cfg.moe_topk * MOE_SLACK
+                                               + cfg.moe_shared_experts)
+        mlp += 2.0 * d * cfg.moe_experts          # router
+    else:
+        gates = 3 if cfg.mlp_act in ("swiglu", "geglu") else 2
+        mlp = 2.0 * d * cfg.d_ff * gates
+    return attn + mlp
+
+
+def _ssm_layer_flops_per_token(cfg: ModelConfig, chunk: int) -> float:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, hh, p = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = 2.0 * d * (2 * di + 2 * g * n + hh) + 2.0 * di * d
+    conv = 2.0 * cfg.ssm_conv * (di + 2 * g * n)
+    ssd = 2.0 * chunk * hh * (n + p) + 4.0 * hh * n * p
+    return proj + conv + ssd
+
+
+def _unembed_flops_per_token(cfg: ModelConfig) -> float:
+    return 2.0 * cfg.d_model * cfg.vocab_size
+
+
+def train_cell_cost(cfg: ModelConfig, shape: ShapeConfig, *, dp: int,
+                    tp: int, fsdp: bool, microbatches: int,
+                    accum_bytes: int = 4, moment_bytes: int = 4,
+                    remat: str = "full",
+                    sequence_parallel: bool = True,
+                    banded_local: bool = False,
+                    moe_fp8_a2a: bool = False,
+                    moe_slack: float = MOE_SLACK) -> CellCost:
+    """Train-step cost per device."""
+    c = CellCost()
+    db = _dtype_bytes(cfg)
+    b_dev = max(shape.global_batch // dp, 1)
+    s = shape.seq_len
+    tokens_dev = b_dev * s
+    k = max(microbatches, 1)
+    n_layers = cfg.num_layers
+    n_enc = cfg.encoder_layers
+    n_params = cfg.n_params()
+    params_dev = n_params * db / (tp * (dp if fsdp else 1))
+    params_msharded = n_params * db / tp       # gathered-over-data footprint
+
+    # ---------------- FLOPs ---------------- #
+    # remat="moe" saves the expert path (the bulk of MoE flops) but still
+    # recomputes attention/router/norms: ~0.25x of a full fwd recompute
+    recompute = {"full": 1.0, "dots": 0.5, "moe": 0.25}.get(remat, 0.0)
+    mm_factor = 1.0 + recompute + BWD_MATMUL_FACTOR
+    attn_factor = 1.0 + recompute + ATTN_BWD_FACTOR
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        proj = _proj_flops_per_token(cfg) * n_layers
+        if banded_local and cfg.local_global_ratio and cfg.window:
+            # §Perf: banded local layers sweep 2*window keys, globals full
+            gsz = cfg.local_global_ratio + 1
+            n_glob = n_layers // gsz
+            n_loc = n_layers - n_glob
+            attn = (_attn_layer_flops_fwd(s, 2 * cfg.window,
+                                          cfg.num_heads, cfg.head_dim)
+                    * n_loc
+                    + _attn_layer_flops_fwd(s, s, cfg.num_heads,
+                                            cfg.head_dim) * n_glob) * b_dev
+        else:
+            attn = _attn_layer_flops_fwd(s, s, cfg.num_heads, cfg.head_dim) \
+                * n_layers * b_dev
+    elif cfg.family == "ssm":
+        proj = _ssm_layer_flops_per_token(cfg, 256) * n_layers
+        attn = 0.0
+    elif cfg.family == "hybrid":
+        n_groups = -(-n_layers // cfg.hybrid_attn_every)
+        proj = _ssm_layer_flops_per_token(cfg, 256) * n_layers
+        proj += (_proj_flops_per_token(cfg)) * n_groups
+        attn = _attn_layer_flops_fwd(s, s, cfg.num_heads, cfg.head_dim) * n_groups * b_dev
+    elif cfg.family == "encdec":
+        enc_t = cfg.encoder_tokens
+        proj = _proj_flops_per_token(cfg) * n_layers          # dec self+mlp
+        proj += _proj_flops_per_token(cfg) * n_enc            # encoder
+        # cross-attn projections: q from dec, kv from enc (approx as attn proj)
+        proj += 2.0 * cfg.d_model * cfg.num_heads * cfg.head_dim * 2 * n_layers
+        attn = (_attn_layer_flops_fwd(s, s, cfg.num_heads, cfg.head_dim)
+                + _attn_layer_flops_fwd(s, enc_t, cfg.num_heads, cfg.head_dim)
+                ) * n_layers * b_dev
+        attn += _attn_layer_flops_fwd(enc_t, enc_t, cfg.num_heads,
+                                      cfg.head_dim) * n_enc * b_dev
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.family == "moe" and moe_slack != MOE_SLACK:
+        gates = 3 if cfg.mlp_act in ("swiglu", "geglu") else 2
+        delta = 2.0 * cfg.d_model * cfg.moe_dff * gates * cfg.moe_topk \
+            * (moe_slack - MOE_SLACK) * n_layers
+        proj += delta
+    mm_flops_dev = (proj * tokens_dev + _unembed_flops_per_token(cfg)
+                    * tokens_dev) / tp
+    attn_flops_dev = attn / tp
+    c.flops = mm_flops_dev * mm_factor + attn_flops_dev * attn_factor
+    # CE loss ~ 6 flops/logit fwd+bwd
+    c.flops += 6.0 * tokens_dev * cfg.vocab_size / tp
+
+    # ---------------- HBM bytes ---------------- #
+    # params read 3x per microbatch (fwd, recompute, bwd) + optimizer rw
+    c.hbm_bytes += 3.0 * k * params_msharded / (dp if fsdp else 1) \
+        + 5.0 * params_dev + 2.0 * n_params * (accum_bytes + moment_bytes) \
+        / (tp * dp)
+    # activations: ~12 d-bytes per token per layer fwd, x(1+rec+2) passes
+    act_pass = 12.0 * tokens_dev * cfg.d_model * db * (n_layers + n_enc) / tp
+    c.hbm_bytes += act_pass * (1 + recompute + 2.0)
+    # remat stash write+read
+    stash = (n_layers + n_enc) * tokens_dev * cfg.d_model * db / tp
+    c.hbm_bytes += 2.0 * stash
+    # logits fwd+bwd f32
+    c.hbm_bytes += 3.0 * tokens_dev * cfg.vocab_size * 4 / tp
+
+    # ---------------- collectives ---------------- #
+    ftp = (tp - 1) / tp if tp > 1 else 0.0
+    fdp = (dp - 1) / dp if dp > 1 else 0.0
+    tok_bytes = tokens_dev * cfg.d_model * db
+    if tp > 1:
+        # Megatron-SP: AG+RS pairs around attn and mlp, fwd+recompute+bwd
+        per_pass = 4.0 * ftp * tok_bytes
+        c.add_coll("all-gather", per_pass * (1 + recompute) * 0.5 * 3)
+        c.add_coll("reduce-scatter", per_pass * (1 + recompute) * 0.5 * 3)
+        if not sequence_parallel:
+            c.coll_bytes.clear()
+            c.add_coll("all-reduce", 2.0 * 2.0 * ftp * tok_bytes * 3)
+    if dp > 1:
+        # grad reduction: ZeRO reduce-scatter + param all-gather
+        c.add_coll("reduce-scatter", fdp * n_params * accum_bytes / tp)
+        c.add_coll("all-gather", fdp * n_params * db / tp)
+        if fsdp:
+            # params re-gathered per microbatch per pass
+            c.add_coll("all-gather", 3.0 * k * fdp * params_msharded / dp)
+    if cfg.family == "moe" and tp > 1:
+        # EP all-to-all: every token ships TOP-K copies (+capacity slack)
+        # each way; dispatch+combine (x2), fwd+recompute+bwd passes.
+        # remat="moe" saves the post-a2a buffers, so the recompute pass
+        # ships no a2a; fp8 halves the payload.
+        a2a_db = 1 if moe_fp8_a2a else db
+        a2a_passes = 2.0 if remat == "moe" else (2.0 + recompute)
+        routed = tokens_dev * cfg.moe_topk * moe_slack
+        a2a = ftp * routed * cfg.d_model * a2a_db
+        c.add_coll("all-to-all", 2.0 * a2a * a2a_passes * n_layers)
+    # loss scalars etc.
+    c.add_coll("all-reduce", 8.0 * tokens_dev)
+
+    # ---------------- memory ---------------- #
+    c.mem_bytes["params"] = params_dev
+    c.mem_bytes["grads"] = 2.0 * n_params * accum_bytes / (tp * (dp if fsdp else 1))
+    c.mem_bytes["moments"] = 2.0 * n_params * moment_bytes / (tp * dp)
+    sp = tp if sequence_parallel else 1
+    c.mem_bytes["remat_stash"] = (n_layers + n_enc) * (tokens_dev / k) \
+        * cfg.d_model * db / sp * 1.5
+    c.mem_bytes["logits"] = 2.0 * (tokens_dev / k) * cfg.vocab_size * 4 / tp
+    if fsdp:
+        c.mem_bytes["gathered_layer"] = 2.0 * params_msharded / max(n_layers, 1)
+    if cfg.family == "moe":
+        cap = tokens_dev / k * cfg.moe_topk * moe_slack
+        c.mem_bytes["moe_buffers"] = 3.0 * cap * cfg.d_model * db / tp
+        if remat == "moe":
+            # named-saved post-a2a buffers, all layers of one microbatch
+            c.mem_bytes["moe_saved"] = cap * cfg.d_model * db / tp \
+                * n_layers
+    # attention working set (q,k,v,o one layer, one microbatch)
+    c.mem_bytes["attn_ws"] = 6.0 * (tokens_dev / k) * cfg.num_heads \
+        * cfg.head_dim * 4 / max(tp, 1)
+    return c
+
+
+def serve_cell_cost(cfg: ModelConfig, shape: ShapeConfig, *, dp: int,
+                    tp: int, expand_kv: bool, fsdp: bool = False,
+                    cache_seq_shard: int = 1,
+                    cache_seq_axis: Optional[str] = None,
+                    cache_dtype_bytes: Optional[int] = None,
+                    banded_local: bool = False,
+                    triangular: bool = False) -> CellCost:
+    """Prefill or decode step cost per device."""
+    c = CellCost()
+    db = _dtype_bytes(cfg)
+    cdb = cache_dtype_bytes if cache_dtype_bytes is not None else db
+    b_glob = shape.global_batch
+    batch_shardable = b_glob >= dp and b_glob % dp == 0
+    b_dev = b_glob // dp if batch_shardable else b_glob
+    s = shape.seq_len
+    n_layers, n_enc = cfg.num_layers, cfg.encoder_layers
+    n_params = cfg.n_params()
+    # FSDP-for-serve: weights sharded over data too, all-gathered per layer
+    params_msharded = n_params * db / tp
+    params_dev = params_msharded / (dp if fsdp else 1)
+    kv_heads = cfg.num_heads if expand_kv else max(cfg.num_kv_heads, 1)
+    # head sharding (model axis) composes with DATA-axis seq sharding but
+    # not with MODEL-axis seq sharding
+    seq_on_model = cache_seq_axis == "model"
+    kv_shard = tp if (expand_kv or (cfg.num_kv_heads and cfg.num_kv_heads
+                                    % tp == 0 and not seq_on_model)) \
+        else 1
+
+    if cfg.family == "hybrid":
+        n_attn = -(-n_layers // cfg.hybrid_attn_every)
+    elif cfg.family == "ssm":
+        n_attn = 0
+    else:
+        n_attn = n_layers
+
+    if shape.kind == "prefill":
+        tokens_dev = b_dev * s
+        if cfg.family in ("ssm", "hybrid"):
+            proj = _ssm_layer_flops_per_token(cfg, 256) * n_layers
+            if cfg.family == "hybrid":
+                proj += _proj_flops_per_token(cfg) * n_attn
+        else:
+            proj = _proj_flops_per_token(cfg) * n_layers
+            if cfg.family == "encdec":
+                proj += _proj_flops_per_token(cfg) * n_enc
+        if banded_local and cfg.local_global_ratio and cfg.window:
+            gsz = cfg.local_global_ratio + 1
+            n_glob = n_attn // gsz
+            attn = (_attn_layer_flops_fwd(s, 2 * cfg.window, cfg.num_heads,
+                                          cfg.head_dim) * (n_attn - n_glob)
+                    + _attn_layer_flops_fwd(s, s, cfg.num_heads,
+                                            cfg.head_dim) * n_glob) * b_dev
+        else:
+            attn = _attn_layer_flops_fwd(s, s, cfg.num_heads, cfg.head_dim) \
+                * n_attn * b_dev
+        if triangular and cfg.family not in ("ssm",):
+            nb = max(s // ATTN_CHUNK, 1)
+            attn *= (nb + 1) / (2 * nb)      # cond-skipped upper triangle
+        c.flops = (proj * tokens_dev + _unembed_flops_per_token(cfg)
+                   * tokens_dev + attn) / tp
+        c.hbm_bytes = params_msharded + 14.0 * tokens_dev * cfg.d_model \
+            * db * (n_layers + n_enc) / tp
+        ftp = (tp - 1) / tp if tp > 1 else 0.0
+        fdp = (dp - 1) / dp if dp > 1 else 0.0
+        tok_bytes = tokens_dev * cfg.d_model * db
+        c.add_coll("all-gather", 2.0 * ftp * tok_bytes)
+        c.add_coll("reduce-scatter", 2.0 * ftp * tok_bytes)
+        if fsdp:
+            c.add_coll("all-gather", fdp * params_msharded)
+        if cfg.family == "moe" and tp > 1:
+            routed = tokens_dev * cfg.moe_topk * MOE_SLACK
+            c.add_coll("all-to-all", 2.0 * ftp * routed * cfg.d_model
+                       * db * n_layers)
+        c.mem_bytes["params"] = params_dev
+        if fsdp:
+            c.mem_bytes["gathered_layer"] = \
+                2.0 * params_msharded / max(n_layers, 1)
+        c.mem_bytes["cache"] = 2.0 * n_attn * b_dev * s * kv_heads \
+            * cfg.head_dim * cdb / (kv_shard * cache_seq_shard)
+        c.mem_bytes["acts"] = 8.0 * tokens_dev * cfg.d_model * db / tp
+        c.mem_bytes["logits"] = tokens_dev * cfg.vocab_size * 4 / tp
+        return c
+
+    # ---- decode: one token against a cache of length s ---- #
+    tokens_dev = b_dev
+    if cfg.family in ("ssm", "hybrid"):
+        proj = _ssm_layer_flops_per_token(cfg, 1) * n_layers
+        if cfg.family == "hybrid":
+            proj += _proj_flops_per_token(cfg) * n_attn
+        state_bytes = n_layers * b_dev * cfg.ssm_heads * cfg.ssm_state \
+            * cfg.ssm_head_dim * 4 / max(kv_shard, 1)
+    else:
+        proj = _proj_flops_per_token(cfg) * n_layers
+        state_bytes = 0.0
+    cache_bytes_dev = 2.0 * n_attn * b_dev * s * kv_heads * cfg.head_dim \
+        * cdb / (kv_shard * cache_seq_shard)
+    attn_flops = 4.0 * s * cfg.num_heads * cfg.head_dim * n_attn * b_dev \
+        / (tp * cache_seq_shard)
+    c.flops = (proj + _unembed_flops_per_token(cfg)) * tokens_dev / tp \
+        + attn_flops
+    # decode is bandwidth-bound: read all params + whole cache + states
+    c.hbm_bytes = params_msharded / (dp if fsdp else 1) * (dp if fsdp else 1) \
+        + cache_bytes_dev + state_bytes \
+        + tokens_dev * cfg.vocab_size * 4 / tp
+    ftp = (tp - 1) / tp if tp > 1 else 0.0
+    fdp = (dp - 1) / dp if dp > 1 else 0.0
+    if fsdp:
+        # weights re-gathered every step: the decode killer the serve-mesh
+        # chooser avoids (see runtime.sharding.choose_serve_mesh)
+        c.add_coll("all-gather", fdp * params_msharded)
+    if tp > 1:
+        # 2 all-reduces per layer (attn out, mlp out) of (b_dev, d)
+        c.add_coll("all-reduce", 2.0 * 2.0 * ftp * b_dev * cfg.d_model * db
+                   * (n_layers + n_enc))
+    if cfg.family == "moe" and tp > 1:
+        c.add_coll("all-to-all", 2.0 * ftp * b_dev * cfg.moe_topk
+                   * MOE_SLACK * cfg.d_model * db * n_layers)
+    if cache_seq_shard > 1:
+        # split-KV partial softmax combine: (m, l, acc) per layer
+        part = b_dev * cfg.num_heads * (cfg.head_dim + 2) * 4 * n_attn
+        c.add_coll("all-reduce", 2.0 * (cache_seq_shard - 1)
+                   / cache_seq_shard * part)
+    c.mem_bytes["params"] = params_dev
+    c.mem_bytes["cache"] = cache_bytes_dev
+    c.mem_bytes["ssm_state"] = state_bytes
+    c.mem_bytes["logits"] = tokens_dev * cfg.vocab_size * 4 / tp
+    return c
+
+
+def cell_cost(cfg: ModelConfig, shape: ShapeConfig, plan: Any,
+              microbatches: int = 1, remat: str = "full",
+              overrides: Optional[dict] = None) -> CellCost:
+    """Dispatch on shape kind using a runtime ``Plan``."""
+    ov = overrides or {}
+    dp, tp = plan.info.dp, plan.info.tp
+    if shape.kind == "train":
+        return train_cell_cost(
+            cfg, shape, dp=dp, tp=tp, fsdp=plan.fsdp,
+            microbatches=microbatches,
+            accum_bytes=2 if plan.accum_dtype == "bfloat16" else 4,
+            moment_bytes=2 if plan.moment_dtype == "bfloat16" else 4,
+            remat=remat,
+            banded_local=ov.get("banded_local", False),
+            moe_fp8_a2a=ov.get("moe_fp8_a2a", False),
+            moe_slack=ov.get("moe_slack", MOE_SLACK))
+    css, css_axis = 1, None
+    cs = plan.act_rules.get("cache_seq")
+    if cs is not None:
+        axes = cs if isinstance(cs, tuple) else (cs,)
+        if any(a in plan.info.model_axes for a in axes):
+            css, css_axis = tp, "model"
+        else:
+            css, css_axis = dp, "data"
+    cdb = getattr(plan, "cache_dtype_bytes", None)
+    return serve_cell_cost(cfg, shape, dp=dp, tp=tp,
+                           expand_kv=plan.expand_kv, fsdp=plan.fsdp,
+                           cache_seq_shard=css, cache_seq_axis=css_axis,
+                           cache_dtype_bytes=cdb,
+                           banded_local=ov.get("banded_local", False),
+                           triangular=ov.get("triangular_causal", False))

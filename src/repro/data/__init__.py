@@ -1,0 +1,3 @@
+"""repro.data — deterministic restart-safe sharded synthetic pipeline."""
+from repro.data.pipeline import DataConfig, data_config_for, iterator, make_batch
+__all__ = ["DataConfig", "data_config_for", "iterator", "make_batch"]

@@ -1,0 +1,6 @@
+"""repro.kernels — Pallas TPU kernels (pl.pallas_call + BlockSpec) with
+runtime-resolved mappings, jit'd wrappers (ops) and pure-jnp oracles (ref)."""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

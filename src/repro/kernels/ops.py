@@ -1,0 +1,189 @@
+"""Public jit'd kernel API with platform dispatch.
+
+Production pattern: each op resolves its mapping at trace time from the
+detected hardware (the paper's runtime technique), then dispatches to
+
+  * the Pallas TPU kernel on ``tpu`` platforms,
+  * the pure-jnp reference on other platforms (so CPU dry-runs lower
+    compact HLO and CI runs everywhere),
+  * the Pallas kernel in interpret mode when ``force="interpret"``
+    (used by the kernel test suite on CPU).
+
+``set_default_policy`` / ``set_force_mode`` give process-wide control; the
+``policy=`` kwarg overrides per call.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hw import TpuParams, detect
+from repro.core.mapper import MappingPolicy
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gcn_agg import gcn_aggregate_pallas
+from repro.kernels.matmul import matmul_pallas
+from repro.kernels.nn_search import nn_search_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.saxpy import saxpy_pallas
+from repro.kernels.stencil import gaussian_blur_pallas
+from repro.kernels.vecadd import vecadd_pallas
+
+ForceMode = Literal["auto", "pallas", "interpret", "ref"]
+
+_DEFAULT_POLICY: MappingPolicy = MappingPolicy.AUTO
+_FORCE: ForceMode = "auto"
+
+
+def set_default_policy(policy: MappingPolicy | str) -> None:
+    global _DEFAULT_POLICY
+    _DEFAULT_POLICY = MappingPolicy(policy)
+
+
+def set_force_mode(mode: ForceMode) -> None:
+    global _FORCE
+    _FORCE = mode
+
+
+def _resolve(policy) -> MappingPolicy:
+    return MappingPolicy(policy) if policy is not None else _DEFAULT_POLICY
+
+
+def _use_pallas() -> tuple[bool, bool]:
+    """-> (use_pallas_kernel, interpret_flag)."""
+    if _FORCE == "ref":
+        return False, False
+    if _FORCE == "interpret":
+        return True, True
+    if _FORCE == "pallas":
+        return True, False
+    return (jax.default_backend() == "tpu"), False
+
+
+def _hw() -> TpuParams:
+    return detect()
+
+
+# --------------------------------------------------------------------------- #
+
+
+def vecadd(x, y, *, policy=None, hw: Optional[TpuParams] = None):
+    pol = _resolve(policy)
+    use, interp = _use_pallas()
+    if not use:
+        return ref.vecadd(x, y)
+    return vecadd_pallas(x, y, hw=hw or _hw(), policy=pol, interpret=interp)
+
+
+def saxpy(a, x, y, *, policy=None, hw: Optional[TpuParams] = None):
+    pol = _resolve(policy)
+    use, interp = _use_pallas()
+    if not use:
+        return ref.saxpy(a, x, y)
+    return saxpy_pallas(a, x, y, hw=hw or _hw(), policy=pol, interpret=interp)
+
+
+def matmul(a, b, *, policy=None, out_dtype=None, hw: Optional[TpuParams] = None):
+    pol = _resolve(policy)
+    use, interp = _use_pallas()
+    if not use:
+        return ref.matmul(a, b, out_dtype=out_dtype)
+    return matmul_pallas(a, b, hw=hw or _hw(), policy=pol,
+                         out_dtype=out_dtype, interpret=interp)
+
+
+def rmsnorm(x, gamma, *, eps: float = 1e-6, policy=None,
+            hw: Optional[TpuParams] = None):
+    """x: (..., d) — leading dims flattened into token rows."""
+    pol = _resolve(policy)
+    use, interp = _use_pallas()
+    if not use:
+        return ref.rmsnorm(x, gamma, eps)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    out = rmsnorm_pallas(x2, gamma, hw=hw or _hw(), eps=eps, policy=pol,
+                         interpret=interp)
+    return out.reshape(shape)
+
+
+def gaussian_blur(img, *, ksize: int = 5, sigma: float = 1.0, policy=None,
+                  hw: Optional[TpuParams] = None):
+    pol = _resolve(policy)
+    use, interp = _use_pallas()
+    if not use:
+        return ref.gaussian_blur(img, ksize, sigma)
+    return gaussian_blur_pallas(img, hw=hw or _hw(), ksize=ksize, sigma=sigma,
+                                policy=pol, interpret=interp)
+
+
+def nn_search(queries, refs, *, policy=None, hw: Optional[TpuParams] = None):
+    pol = _resolve(policy)
+    use, interp = _use_pallas()
+    if not use:
+        return ref.nn_search(queries, refs)
+    return nn_search_pallas(queries, refs, hw=hw or _hw(), policy=pol,
+                            interpret=interp)
+
+
+def gcn_aggregate(adj_norm, feats, *, policy=None,
+                  hw: Optional[TpuParams] = None):
+    pol = _resolve(policy)
+    use, interp = _use_pallas()
+    if not use:
+        return ref.gcn_aggregate(adj_norm, feats)
+    return gcn_aggregate_pallas(adj_norm, feats, hw=hw or _hw(), policy=pol,
+                                interpret=interp)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None, policy=None,
+                    hw: Optional[TpuParams] = None):
+    """q (..., sq, d), k/v (..., skv, d): leading dims vmapped."""
+    pol = _resolve(policy)
+    use, interp = _use_pallas()
+    if not use:
+        fn = functools.partial(ref.attention_chunked, causal=causal, scale=scale)
+    else:
+        fn = functools.partial(flash_attention_pallas, hw=hw or _hw(),
+                               causal=causal, scale=scale, policy=pol,
+                               interpret=interp)
+    for _ in range(q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len=None, *, scale=None,
+                     policy=None, hw: Optional[TpuParams] = None):
+    """q (..., d), caches (..., S, d), cache_len broadcastable to leading."""
+    pol = _resolve(policy)
+    use, interp = _use_pallas()
+    if not use:
+        fn = functools.partial(ref.decode_attention, scale=scale)
+    else:
+        fn = functools.partial(decode_attention_pallas, hw=hw or _hw(),
+                               scale=scale, policy=pol, interpret=interp)
+    lead = q.ndim - 1
+    if cache_len is None:
+        cache_len = jnp.full(q.shape[:lead], k_cache.shape[-2], jnp.int32)
+    else:
+        cache_len = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32),
+                                     q.shape[:lead])
+    fn2 = lambda q_, k_, v_, l_: fn(q_, k_, v_, l_)
+    for _ in range(lead):
+        fn2 = jax.vmap(fn2)
+    return fn2(q, k_cache, v_cache, cache_len)
+
+
+def ssd(x, a, b, c, *, chunk=None, policy=None, hw: Optional[TpuParams] = None):
+    """Mamba-2 SSD: x (L,H,P), a (L,H), b/c (L,G,N)."""
+    del policy  # chunk planning lives in models.ssm.plan_ssd_chunk
+    use, interp = _use_pallas()
+    if not use:
+        return ref.ssd_chunked(x, a, b, c, chunk=chunk or 128)
+    from repro.kernels.ssd import ssd_pallas
+    return ssd_pallas(x, a, b, c, hw=hw or _hw(), chunk=chunk,
+                      interpret=interp)

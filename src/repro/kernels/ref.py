@@ -1,0 +1,263 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth used by:
+  * tests/test_kernels.py — assert_allclose sweeps over shapes/dtypes;
+  * kernels.ops — the CPU/portable fallback path (the production registry
+    dispatches to Pallas on TPU, to these on other platforms so dry-runs
+    lower compact HLO).
+
+``attention_chunked`` is additionally the *memory-faithful* reference: it
+reproduces flash attention's O(seq) working set with a lax.scan over KV
+chunks, so the CPU dry-run's HLO bytes approximate the fused kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------- #
+# Paper kernel suite
+# --------------------------------------------------------------------------- #
+
+
+def vecadd(x: jax.Array, y: jax.Array) -> jax.Array:
+    return x + y
+
+
+def saxpy(a: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    return a * x + y
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0)
+
+
+def matmul(a: jax.Array, b: jax.Array,
+           out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def gaussian_kernel_1d(ksize: int = 5, sigma: float = 1.0) -> jax.Array:
+    half = (ksize - 1) / 2.0
+    x = jnp.arange(ksize, dtype=jnp.float32) - half
+    k = jnp.exp(-0.5 * (x / sigma) ** 2)
+    return k / jnp.sum(k)
+
+
+def gaussian_blur(img: jax.Array, ksize: int = 5, sigma: float = 1.0) -> jax.Array:
+    """Separable 2D gaussian blur with zero ('same') padding."""
+    k = gaussian_kernel_1d(ksize, sigma).astype(jnp.float32)
+    h = img.astype(jnp.float32)
+    # rows pass (convolve along axis 1), then columns (axis 0)
+    pad = (ksize - 1) // 2
+
+    def conv_last(x):
+        xp = jnp.pad(x, ((0, 0), (pad, pad)))
+        return sum(xp[:, i:i + x.shape[1]] * k[i] for i in range(ksize))
+
+    h = conv_last(h)
+    h = conv_last(h.T).T
+    return h.astype(img.dtype)
+
+
+def nn_search(queries: jax.Array, refs: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Nearest neighbour: L2 distances queries (Q,D) vs refs (R,D).
+
+    Returns (index int32 (Q,), squared distance (Q,))."""
+    d2 = (
+        jnp.sum(queries.astype(jnp.float32) ** 2, -1, keepdims=True)
+        - 2.0 * queries.astype(jnp.float32) @ refs.astype(jnp.float32).T
+        + jnp.sum(refs.astype(jnp.float32) ** 2, -1)[None, :]
+    )
+    idx = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    return idx, jnp.take_along_axis(d2, idx[:, None].astype(jnp.int32), axis=-1)[:, 0]
+
+
+def gcn_aggregate(adj_norm: jax.Array, feats: jax.Array) -> jax.Array:
+    """GCN neighbourhood aggregation: A_hat @ X (Kipf & Welling),
+    with A_hat the (dense, normalized) adjacency."""
+    return (adj_norm.astype(jnp.float32) @ feats.astype(jnp.float32)).astype(feats.dtype)
+
+
+def gcn_aggregate_edges(edges_src: jax.Array, edges_dst: jax.Array,
+                        edge_weight: jax.Array, feats: jax.Array,
+                        n_nodes: int) -> jax.Array:
+    """Edge-list oracle for the same aggregation (segment-sum semantics)."""
+    msgs = feats[edges_src] * edge_weight[:, None]
+    return jax.ops.segment_sum(msgs, edges_dst, num_segments=n_nodes).astype(feats.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# LM hot-spot kernels
+# --------------------------------------------------------------------------- #
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True, scale: Optional[float] = None,
+              bias: Optional[jax.Array] = None) -> jax.Array:
+    """Naive full-materialization attention. q,k,v: (sq, d), (skv, d)."""
+    sq, d = q.shape
+    skv = k.shape[0]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    if bias is not None:
+        s = s + bias
+    if causal:
+        qi = jnp.arange(sq)[:, None] + (skv - sq)
+        ki = jnp.arange(skv)[None, :]
+        s = jnp.where(ki <= qi, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, scale: Optional[float] = None,
+                      chunk: int = 512) -> jax.Array:
+    """Flash-structured attention: lax.scan over KV chunks with running
+    (max, sum, acc) — the memory-faithful oracle / portable fallback."""
+    sq, d = q.shape
+    skv = k.shape[0]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    chunk = min(chunk, skv)
+    while skv % chunk:
+        chunk //= 2
+    n_chunks = skv // chunk
+    qf = q.astype(jnp.float32) * scale
+    kc = k.astype(jnp.float32).reshape(n_chunks, chunk, d)
+    vc = v.astype(jnp.float32).reshape(n_chunks, chunk, d)
+    q_pos = jnp.arange(sq) + (skv - sq)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, c_idx = xs
+        s = qf @ kb.T                                    # (sq, chunk)
+        if causal:
+            kv_pos = c_idx * chunk + jnp.arange(chunk)
+            s = jnp.where(kv_pos[None, :] <= q_pos[:, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        # guard fully-masked rows (m_new = -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + jnp.sum(p, -1)
+        acc_new = acc * alpha[:, None] + p @ vb
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((sq,), -jnp.inf, jnp.float32),
+        jnp.zeros((sq,), jnp.float32),
+        jnp.zeros((sq, d), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init,
+                                  (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: Optional[jax.Array] = None,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Single-token decode attention. q: (d,), caches: (S, d).
+
+    ``cache_len`` masks positions >= cache_len (ragged cache)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    s = (k_cache.astype(jnp.float32) @ q.astype(jnp.float32)) * scale
+    if cache_len is not None:
+        pos = jnp.arange(k_cache.shape[0])
+        s = jnp.where(pos < cache_len, s, -jnp.inf)
+    p = jax.nn.softmax(s)
+    return (p @ v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    """Fused SwiGLU MLP oracle: silu(x@Wg) * (x@Wu) @ Wd."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "return_state"))
+def ssd_chunked(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+                chunk: int = 64, return_state: bool = False):
+    """Mamba-2 SSD (state-space duality) reference, chunked form.
+
+    x: (L, H, P)  per-head inputs     a: (L, H) log-decay (negative)
+    b: (L, G, N)  input projections   c: (L, G, N) output projections
+    (G state groups broadcast over H heads; H % G == 0.)
+
+    y[t] = sum_{s<=t} C_t^T (prod_{r=s+1..t} exp(a_r)) B_s x_s
+    """
+    L, H, P = x.shape
+    G, N = b.shape[1], b.shape[2]
+    rep = H // G
+    bh = jnp.repeat(b, rep, axis=1)     # (L, H, N)
+    ch = jnp.repeat(c, rep, axis=1)
+
+    nchunks = L // chunk
+    xc = x.reshape(nchunks, chunk, H, P)
+    ac = a.reshape(nchunks, chunk, H)
+    bc = bh.reshape(nchunks, chunk, H, N)
+    cc = ch.reshape(nchunks, chunk, H, N)
+
+    def scan_chunk(state, inp):
+        xk, ak, bk, ck = inp            # (c,H,P),(c,H),(c,H,N),(c,H,N)
+        cum = jnp.cumsum(ak, axis=0)    # (c, H)
+        total = cum[-1]
+        # intra-chunk (quadratic within chunk)
+        # decay(t,s) = exp(cum[t]-cum[s]) for s<=t
+        dt = cum[:, None, :] - cum[None, :, :]          # (c, c, H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dec = jnp.where(mask[..., None], jnp.exp(dt), 0.0)
+        # scores: (t, s, H) = sum_N ck[t]·bk[s]
+        sc = jnp.einsum("thn,shn->tsh", ck, bk) * dec
+        y_intra = jnp.einsum("tsh,shp->thp", sc, xk)
+        # contribution of carried state: y_state[t] = C_t^T exp(cum[t]) state
+        y_state = jnp.einsum("thn,hnp->thp", ck * jnp.exp(cum)[..., None], state)
+        # update state: state' = exp(total) state + sum_s exp(total-cum[s]) B_s x_s
+        w = jnp.exp(total[None, :] - cum)               # (c, H)
+        state_new = state * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "shn,shp->hnp", bk * w[..., None], xk)
+        return state_new, y_intra + y_state
+
+    init = jnp.zeros((H, N, P), jnp.float32)
+    final, yc = jax.lax.scan(scan_chunk, init,
+                             (xc.astype(jnp.float32), ac.astype(jnp.float32),
+                              bc.astype(jnp.float32), cc.astype(jnp.float32)))
+    y = yc.reshape(L, H, P).astype(x.dtype)
+    return (y, final) if return_state else y
+
+
+def ssd_sequential(x: jax.Array, a: jax.Array, b: jax.Array,
+                   c: jax.Array) -> jax.Array:
+    """O(L) sequential recurrence oracle for SSD (slow, exact)."""
+    L, H, P = x.shape
+    G, N = b.shape[1], b.shape[2]
+    rep = H // G
+    bh = jnp.repeat(b, rep, axis=1)
+    ch = jnp.repeat(c, rep, axis=1)
+
+    def step(state, inp):
+        xt, at, bt, ct = inp
+        state = state * jnp.exp(at)[:, None, None] + jnp.einsum("hn,hp->hnp", bt, xt)
+        y = jnp.einsum("hn,hnp->hp", ct, state)
+        return state, y
+
+    init = jnp.zeros((H, N, P), jnp.float32)
+    _, y = jax.lax.scan(step, init,
+                        (x.astype(jnp.float32), a.astype(jnp.float32),
+                         bh.astype(jnp.float32), ch.astype(jnp.float32)))
+    return y.astype(x.dtype)

@@ -1,0 +1,52 @@
+"""vecadd — the paper's Fig. 1 kernel, mapped by the runtime block planner.
+
+The ``lws`` analogue is ``plan.block_elems``: the number of elements one
+program instance covers.  The three policies (naive / fixed / auto) produce
+different (block, grid) decompositions of the same gws, exactly mirroring
+Fig. 1's four traces.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hw import TpuParams
+from repro.core.mapper import BlockPlan, MappingPolicy, plan_vector_blocks
+from repro.core.workload import vecadd as vecadd_workload
+
+
+def _vecadd_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def vecadd_pallas(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    hw: TpuParams,
+    policy: MappingPolicy = MappingPolicy.AUTO,
+    plan: BlockPlan | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """c = a + b with runtime-resolved BlockSpec (Eq. 1 at tier 1/2)."""
+    assert x.shape == y.shape and x.ndim == 1
+    n = x.shape[0]
+    if plan is None:
+        plan = plan_vector_blocks(
+            vecadd_workload(n, dtype_bytes=x.dtype.itemsize), hw, policy)
+    block = plan.block_elems
+    pad = plan.padded_gws - n
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    yp = jnp.pad(y, (0, pad)) if pad else y
+    out = pl.pallas_call(
+        _vecadd_kernel,
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        grid=(plan.grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=interpret,
+    )(xp, yp)
+    return out[:n] if pad else out

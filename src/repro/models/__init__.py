@@ -1,0 +1,6 @@
+"""repro.models — the architecture zoo (dense / MoE / SSM / hybrid /
+enc-dec / VLM) behind one facade (``build_model``)."""
+
+from repro.models.model import Model, build_model, cross_entropy
+
+__all__ = ["Model", "build_model", "cross_entropy"]

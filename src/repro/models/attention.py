@@ -1,0 +1,458 @@
+"""Grouped-query attention: training/prefill (chunked-flash dataflow) and
+decode (split-KV; GSPMD distributes the sharded-cache reductions).
+
+GQA is computed *grouped* — q reshaped to (B, S, G, R, D) against
+k/v (B, T, G, D) — never materializing repeated KV heads.  On TPU the
+per-head hot loop dispatches to the Pallas flash kernel (kernels/ops); on
+other platforms the lax.scan chunked form below keeps the same O(S·chunk)
+working set so dry-run HLO bytes stay faithful to the fused kernel.
+
+Mask model: ``causal`` + optional sliding ``window`` + optional
+``prefix_len`` (prefix-LM bidirectionality for the VLM) — all expressed as
+position predicates so they compose.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, ShardCtx, apply_rope, rmsnorm
+
+_NEG = float("-inf")
+
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((hd,), (None,), init="zeros")
+        s["k_norm"] = ParamSpec((hd,), (None,), init="zeros")
+    return s
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: Optional[int],
+          prefix_len) -> jax.Array:
+    """q_pos (..., Sq, 1), k_pos (..., 1, Sk) -> bool allowed."""
+    ok = jnp.ones(jnp.broadcast_shapes(q_pos.shape, k_pos.shape), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    if prefix_len is not None:
+        ok |= k_pos < prefix_len          # everyone sees the whole prefix
+    return ok
+
+
+def _mask_dyn(q_pos, k_pos, *, causal: bool, window, prefix,
+              kstart=None) -> jax.Array:
+    """Dynamic-parameter mask: window/prefix/kstart are traced f32 scalars
+    (window = +inf -> no window; prefix = -1 -> no prefix; kstart masks
+    keys below it — used by banded attention for edge-block padding)."""
+    ok = jnp.ones(jnp.broadcast_shapes(q_pos.shape, k_pos.shape), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    ok &= k_pos.astype(jnp.float32) > q_pos.astype(jnp.float32) - window
+    ok |= k_pos.astype(jnp.float32) < prefix
+    if kstart is not None:
+        ok &= k_pos.astype(jnp.float32) >= kstart
+    return ok
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, chunk: int, q_offset: int, scale: float):
+    """Flash attention with a custom VJP.
+
+    Without this, the bwd of the lax.scan chunked form would stash the
+    running (m, l, acc) carry per KV chunk — O(S^2/chunk) memory.  The
+    custom bwd recomputes the probabilities per chunk from the saved
+    (q, k, v, out, lse) — O(S) residuals, ~2.5x fwd FLOPs, the standard
+    flash-attention backward."""
+
+    @jax.custom_vjp
+    def flash(q, k, v, window, prefix, kstart):
+        out, _ = _flash_fwd(q, k, v, window, prefix, kstart)
+        return out
+
+    def _flash_fwd(q, k, v, window, prefix, kstart):
+        b, sq, g, r, d = q.shape
+        sk = k.shape[1]
+        n = sk // chunk
+        qf = q.astype(jnp.float32) * scale
+        kc = jnp.moveaxis(k.astype(jnp.float32).reshape(b, n, chunk, g, d), 1, 0)
+        vc = jnp.moveaxis(v.astype(jnp.float32).reshape(b, n, chunk, g, d), 1, 0)
+        q_pos = jnp.arange(sq) + q_offset
+
+        def step(carry, xs):
+            m, l, acc = carry
+            kb, vb, ci = xs
+            s = jnp.einsum("bsgrd,bcgd->bsgrc", qf, kb)
+            k_pos = ci * chunk + jnp.arange(chunk)
+            ok = _mask_dyn(q_pos[:, None], k_pos[None, :], causal=causal,
+                           window=window, prefix=prefix, kstart=kstart)
+            s = jnp.where(ok[None, :, None, None, :], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, -1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * alpha + jnp.sum(p, -1)
+            acc_new = acc * alpha[..., None] \
+                + jnp.einsum("bsgrc,bcgd->bsgrd", p, vb)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, sq, g, r), _NEG, jnp.float32),
+                jnp.zeros((b, sq, g, r), jnp.float32),
+                jnp.zeros((b, sq, g, r, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(step, init, (kc, vc, jnp.arange(n)))
+        l_safe = jnp.maximum(l, 1e-30)
+        out = (acc / l_safe[..., None]).astype(q.dtype)
+        lse = jnp.where(jnp.isfinite(m), m + jnp.log(l_safe), _NEG)
+        return out, lse
+
+    def fwd(q, k, v, window, prefix, kstart):
+        out, lse = _flash_fwd(q, k, v, window, prefix, kstart)
+        return out, (q, k, v, out, lse, window, prefix, kstart)
+
+    def bwd(res, do):
+        q, k, v, out, lse, window, prefix, kstart = res
+        b, sq, g, r, d = q.shape
+        sk = k.shape[1]
+        n = sk // chunk
+        qf = q.astype(jnp.float32) * scale
+        dof = do.astype(jnp.float32)
+        kc = jnp.moveaxis(k.astype(jnp.float32).reshape(b, n, chunk, g, d), 1, 0)
+        vc = jnp.moveaxis(v.astype(jnp.float32).reshape(b, n, chunk, g, d), 1, 0)
+        q_pos = jnp.arange(sq) + q_offset
+        delta = jnp.sum(dof * out.astype(jnp.float32), -1)       # (B,S,G,R)
+        lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
+
+        def step(dq, xs):
+            kb, vb, ci = xs
+            s = jnp.einsum("bsgrd,bcgd->bsgrc", qf, kb)
+            k_pos = ci * chunk + jnp.arange(chunk)
+            ok = _mask_dyn(q_pos[:, None], k_pos[None, :], causal=causal,
+                           window=window, prefix=prefix, kstart=kstart)
+            s = jnp.where(ok[None, :, None, None, :], s, _NEG)
+            p = jnp.where(jnp.isfinite(s),
+                          jnp.exp(s - lse_safe[..., None]), 0.0)
+            dv = jnp.einsum("bsgrc,bsgrd->bcgd", p, dof)
+            dp = jnp.einsum("bsgrd,bcgd->bsgrc", dof, vb)
+            ds = p * (dp - delta[..., None])
+            dq = dq + jnp.einsum("bsgrc,bcgd->bsgrd", ds, kb) * scale
+            dk = jnp.einsum("bsgrc,bsgrd->bcgd", ds, qf)
+            return dq, (dk, dv)
+
+        dq0 = jnp.zeros((b, sq, g, r, d), jnp.float32)
+        dq, (dks, dvs) = jax.lax.scan(step, dq0, (kc, vc, jnp.arange(n)))
+        dk = jnp.moveaxis(dks, 0, 1).reshape(b, sk, g, d)
+        dv = jnp.moveaxis(dvs, 0, 1).reshape(b, sk, g, d)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+                jnp.zeros_like(window), jnp.zeros_like(prefix),
+                jnp.zeros_like(kstart))
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def chunked_attention(
+    q: jax.Array,                 # (B, Sq, G, R, D)
+    k: jax.Array,                 # (B, Sk, G, D)
+    v: jax.Array,                 # (B, Sk, G, D)
+    *,
+    causal: bool = True,
+    window=None,                  # int | traced scalar | None
+    prefix_len=None,              # int | None
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    chunk: int = 512,
+) -> jax.Array:
+    """Flash-structured grouped attention; returns (B, Sq, G, R, D)."""
+    d = q.shape[-1]
+    sk = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    chunk = min(chunk, sk)
+    while sk % chunk:
+        chunk //= 2
+    win = jnp.asarray(window if window is not None else jnp.inf, jnp.float32)
+    pre = jnp.asarray(prefix_len if prefix_len is not None else -1.0,
+                      jnp.float32)
+    fn = _make_flash(causal, chunk, q_offset, float(scale))
+    return fn(q, k, v, win, pre, jnp.float32(-jnp.inf))
+
+
+def banded_attention(
+    q: jax.Array,                 # (B, S, G, R, D)
+    k: jax.Array,                 # (B, S, G, D)
+    v: jax.Array,
+    *,
+    window: int,
+    band: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Exact causal sliding-window attention in O(S·band) instead of the
+    masked full O(S^2) sweep — the §Perf lever for local:global archs.
+
+    Queries are tiled into bands; each band attends only to (previous
+    band, own band), which is exact whenever ``window <= band``.  The
+    band size is the lws analogue over key positions: the temporal extent
+    one query block sweeps."""
+    b, s, g, r, d = q.shape
+    band = band or window
+    assert window <= band, (window, band)
+    while s % band:
+        band //= 2
+    assert window <= band, "sequence too short for the requested band"
+    nb = s // band
+    qb = q.reshape(b, nb, band, g, r, d)
+    kb = k.reshape(b, nb, band, g, d)
+    vb = v.reshape(b, nb, band, g, d)
+    prev = lambda x: jnp.pad(x, ((0, 0), (1, 0)) + ((0, 0),) * (x.ndim - 2)
+                             )[:, :-1]
+    k2 = jnp.concatenate([prev(kb), kb], axis=2)     # (B, nb, 2*band, G, D)
+    v2 = jnp.concatenate([prev(vb), vb], axis=2)
+    # block 0's "previous band" is padding: mask keys below kstart=band
+    kstart = jnp.where(jnp.arange(nb) == 0, float(band), -jnp.inf
+                       ).astype(jnp.float32)
+    sc = scale if scale is not None else d ** -0.5
+    fn = _make_flash(True, min(512, 2 * band), band, float(sc))
+    out = jax.vmap(
+        lambda qi, ki, vi, ks: fn(qi, ki, vi, jnp.float32(window),
+                                  jnp.float32(-1.0), ks),
+        in_axes=(1, 1, 1, 0), out_axes=1)(qb, k2, v2, kstart)
+    return out.reshape(b, s, g, r, d)
+
+
+def triangular_attention(
+    q: jax.Array,                 # (B, S, G, R, D)
+    k: jax.Array,                 # (B, S, G, D)
+    v: jax.Array,
+    *,
+    chunk: int = 512,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Causal attention with TRIANGULAR chunk scheduling — forward only.
+
+    The masked-full sweep computes nb^2 chunk products; causality only
+    needs nb(nb+1)/2.  Sequential q blocks (lax.scan, NOT vmap — vmap
+    would batch the cond into a select and defeat the skip) each scan the
+    kv chunks with a ``lax.cond`` that skips future chunks at runtime.
+    Used for PREFILL (no grads flow; training keeps the custom-VJP flash
+    path).  §Perf lever, exactness pinned by tests."""
+    b, s, g, r, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nb = s // chunk
+    qr = q.astype(jnp.float32).reshape(b, nb, chunk, g, r, d) * scale
+    kc = k.astype(jnp.float32).reshape(b, nb, chunk, g, d)
+    vc = v.astype(jnp.float32).reshape(b, nb, chunk, g, d)
+
+    def q_block(_, qi):
+        qb = jax.lax.dynamic_index_in_dim(qr, qi, 1, keepdims=False)
+
+        def kv_step(st, ci):
+            def compute(st):
+                m, l, acc = st
+                kb = jax.lax.dynamic_index_in_dim(kc, ci, 1, keepdims=False)
+                vb = jax.lax.dynamic_index_in_dim(vc, ci, 1, keepdims=False)
+                sc = jnp.einsum("bsgrd,bcgd->bsgrc", qb, kb)
+                qp = qi * chunk + jnp.arange(chunk)[:, None]
+                kp = ci * chunk + jnp.arange(chunk)[None, :]
+                sc = jnp.where((kp <= qp)[None, :, None, None, :], sc, _NEG)
+                m_new = jnp.maximum(m, jnp.max(sc, -1))
+                m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+                p = jnp.where(jnp.isfinite(sc),
+                              jnp.exp(sc - m_safe[..., None]), 0.0)
+                alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+                return (m_new, l * alpha + jnp.sum(p, -1),
+                        acc * alpha[..., None]
+                        + jnp.einsum("bsgrc,bcgd->bsgrd", p, vb))
+
+            st = jax.lax.cond(ci <= qi, compute, lambda st: st, st)
+            return st, None
+
+        init = (jnp.full((b, chunk, g, r), _NEG, jnp.float32),
+                jnp.zeros((b, chunk, g, r), jnp.float32),
+                jnp.zeros((b, chunk, g, r, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return 0, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, 0, jnp.arange(nb))
+    # outs (nb, B, chunk, G, R, D) -> (B, S, G, R, D)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, g, r, d)
+
+
+def decode_attention_grouped(
+    q: jax.Array,                 # (B, G, R, D) — one new token
+    k_cache: jax.Array,           # (B, T, G, D)
+    v_cache: jax.Array,
+    cache_len,                    # scalar or (B,)
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Split-KV decode: scores over the full (possibly seq-sharded) cache.
+
+    Expressed as plain einsum + masked softmax so GSPMD turns the
+    reductions over a sharded T into partial-reduce + all-reduce — the
+    distributed flash-decode of DESIGN.md §5 (long_500k cells)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bgrd,btgd->bgrt", q.astype(jnp.float32) * scale,
+                   k_cache.astype(jnp.float32))
+    t = k_cache.shape[1]
+    pos = jnp.arange(t)
+    clen = jnp.asarray(cache_len)
+    clen = clen[:, None, None, None] if clen.ndim else clen
+    ok = pos < clen
+    if window is not None:
+        ok &= pos > clen - 1 - window
+    s = jnp.where(ok, s, _NEG)
+    m = jnp.max(s, -1, keepdims=True)
+    p = jnp.exp(s - jax.lax.stop_gradient(m))
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    out = jnp.einsum("bgrt,btgd->bgrd", p, v_cache.astype(jnp.float32))
+    out = out / jnp.maximum(p.sum(-1), 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Full attention block
+# --------------------------------------------------------------------------- #
+
+
+def _project_qkv(params, x, cfg: ModelConfig, cos, sin, ctx: ShardCtx):
+    """Project q/k/v into the grouped layout (B, S, G, R, D) / (B, S, G, D).
+
+    The GQA sharding regime is resolved at runtime (runtime.sharding):
+      * ``kv_heads % tp == 0`` — grouped: shard the G (kv group) axis;
+      * else if ``heads % tp == 0`` — ``expand_kv``: repeat KV to full
+        heads, shard the (now G=H, R=1) head axis.  Per device this holds
+        H/tp KV head copies — *less* memory than replicating all kv_heads
+        and avoids split-sharded reshapes (no GSPMD resharding thrash);
+      * else — replicated attention (small models only).
+    """
+    b, s, _ = x.shape
+    expand = bool(ctx.flag("expand_kv", False))
+    g = max(cfg.num_kv_heads, 1)
+    r = cfg.num_heads // g
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dgk->bsgk", x, params["wk"])
+    v = jnp.einsum("bsd,dgk->bsgk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if expand:
+        k = jnp.repeat(k, r, axis=2)
+        v = jnp.repeat(v, r, axis=2)
+        g, r = cfg.num_heads, 1
+        kv_axis = "heads"
+    else:
+        kv_axis = "kv_heads"
+    q = q.reshape(b, s, g, r, cfg.head_dim)
+    q = ctx.p(q, "batch", None, kv_axis, None, None)
+    k = ctx.p(k, "batch", None, kv_axis, None)
+    v = ctx.p(v, "batch", None, kv_axis, None)
+    return q, k, v
+
+
+def attention_block(
+    params: dict,
+    x: jax.Array,                 # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    cos=None,
+    sin=None,
+    causal: bool = True,
+    window=None,
+    prefix_len=None,
+    q_offset: int = 0,
+    kv_override: Optional[tuple[jax.Array, jax.Array]] = None,
+    banded: bool = False,
+    ctx: ShardCtx,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Returns (output (B,S,D), (k, v) for caching)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, cos, sin, ctx)
+    if kv_override is not None:
+        k, v = kv_override
+    if banded:
+        o = banded_attention(q, k, v, window=int(window))
+    elif (ctx.flag("triangular_causal", False) and causal
+          and window is None and prefix_len is None and q_offset == 0
+          and kv_override is None):
+        # prefill-only flop skip (fwd-only; train keeps the custom VJP)
+        o = triangular_attention(q, k, v)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, window=window,
+                              prefix_len=prefix_len, q_offset=q_offset)
+    kv_axis = "heads" if ctx.flag("expand_kv", False) else "kv_heads"
+    o = ctx.p(o, "batch", None, kv_axis, None, None)
+    out = jnp.einsum("bshk,hkd->bsd", o.reshape(b, s, -1, cfg.head_dim),
+                     params["wo"])
+    return out, (k, v)
+
+
+#: fixed-point scale for int8 KV caches.  Per-tensor k/v scales fold into
+#: the q/out projections at deployment (standard KV-quant trick), so a
+#: single constant is exact at the lowering level and ~1% error numerically
+#: for unit-variance caches.
+KV_INT8_SCALE = 32.0
+
+
+def _cache_write(cache, new, pos):
+    if cache.dtype == jnp.int8:
+        q = jnp.clip(jnp.round(new.astype(jnp.float32) * KV_INT8_SCALE),
+                     -127, 127).astype(jnp.int8)
+        return jax.lax.dynamic_update_slice_in_dim(cache, q, pos, axis=1)
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, new.astype(cache.dtype), pos, axis=1)
+
+
+def _cache_read(cache, compute_dtype):
+    if cache.dtype == jnp.int8:
+        return (cache.astype(jnp.float32) / KV_INT8_SCALE
+                ).astype(compute_dtype)
+    return cache
+
+
+def attention_decode(
+    params: dict,
+    x: jax.Array,                 # (B, 1, D)
+    cfg: ModelConfig,
+    k_cache: jax.Array,           # (B, T, G, D) — model dtype or int8
+    v_cache: jax.Array,
+    pos,                          # scalar current position
+    *,
+    cos=None,
+    sin=None,
+    window: Optional[int] = None,
+    ctx: ShardCtx,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """One-token decode; returns (out (B,1,D), updated caches)."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(params, x, cfg, cos, sin, ctx)
+    # write the new kv at position `pos` (quantizing if the cache is int8)
+    k_cache = _cache_write(k_cache, k, pos)
+    v_cache = _cache_write(v_cache, v, pos)
+    o = decode_attention_grouped(q[:, 0], _cache_read(k_cache, x.dtype),
+                                 _cache_read(v_cache, x.dtype), pos + 1,
+                                 window=window)
+    out = jnp.einsum("bhk,hkd->bd", o.reshape(b, -1, cfg.head_dim),
+                     params["wo"])
+    return out[:, None, :], (k_cache, v_cache)

@@ -1,0 +1,215 @@
+"""Parameter-spec machinery + shared layers.
+
+Params are nested dicts of arrays, described first by a mirror tree of
+``ParamSpec`` (shape, logical axes, init).  The spec tree is the single
+source of truth for:
+
+  * initialization (``init_params``),
+  * sharding (``runtime.sharding`` maps logical axes -> PartitionSpec),
+  * the dry-run's allocation-free ShapeDtypeStructs (``abstract_params``).
+
+Logical axis vocabulary: ``vocab, embed, heads, kv_heads, head_dim, mlp,
+experts, layers, groups, state, conv, inner`` — the mapping to mesh axes is
+resolved at runtime per (config, mesh) by the paper's technique.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"            # normal | zeros | ones
+    scale: Optional[float] = None   # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def stack_specs(tree: PyTree, n: int) -> PyTree:
+    """Add a leading ``layers`` axis to every spec (scan-over-layers)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                            s.init, s.scale),
+        tree, is_leaf=_is_spec)
+
+
+def init_params(specs: PyTree, key: jax.Array, dtype) -> PyTree:
+    """Deterministic per-path initialization from the spec tree."""
+    leaves = jax.tree_util.tree_leaves_with_path(specs, is_leaf=_is_spec)
+
+    def make(path, s: ParamSpec, k):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dtype)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        scale = s.scale if s.scale is not None else min(0.02, fan_in ** -0.5)
+        return (jax.random.normal(k, s.shape, jnp.float32) * scale).astype(dtype)
+
+    out = {}
+    flat = {}
+    for i, (path, s) in enumerate(leaves):
+        flat[jax.tree_util.keystr(path)] = make(path, s, jax.random.fold_in(key, i))
+    # rebuild structure
+    treedef = jax.tree_util.tree_structure(specs, is_leaf=_is_spec)
+    vals = [flat[jax.tree_util.keystr(p)] for p, _ in leaves]
+    out = jax.tree_util.tree_unflatten(treedef, vals)
+    return out
+
+
+def abstract_params(specs: PyTree, dtype) -> PyTree:
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+                        specs, is_leaf=_is_spec)
+
+
+def spec_axes(specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def param_count(specs: PyTree) -> int:
+    import math
+    return sum(math.prod(s.shape) for s in
+               jax.tree_util.tree_leaves(specs, is_leaf=_is_spec))
+
+
+# --------------------------------------------------------------------------- #
+# Sharding context — activation constraints with runtime-resolved rules
+# --------------------------------------------------------------------------- #
+
+
+class ShardCtx:
+    """Applies activation sharding constraints; no-op off-mesh.
+
+    ``rules`` maps logical activation axes ("batch", "seq", "heads",
+    "embed", "mlp", "experts", "vocab", "cache") to mesh axes (or None).
+    Resolved at runtime by ``runtime.sharding.make_rules`` — the mesh-tier
+    instance of the paper's hardware-aware mapping.
+    """
+
+    def __init__(self, rules: Optional[dict[str, Any]] = None, mesh=None,
+                 flags: Optional[dict[str, Any]] = None):
+        self.rules = rules or {}
+        self.mesh = mesh
+        self.flags = flags or {}
+
+    def flag(self, name: str, default=None):
+        return self.flags.get(name, default)
+
+    def p(self, x: jax.Array, *axes: Optional[str]) -> jax.Array:
+        if not self.rules or self.mesh is None:
+            return x
+        spec = jax.sharding.PartitionSpec(
+            *(self.rules.get(a) if a else None for a in axes))
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec))
+
+
+NO_SHARD = ShardCtx()
+
+
+# --------------------------------------------------------------------------- #
+# Shared layers
+# --------------------------------------------------------------------------- #
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    d = {"tok": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                          scale=0.02)}
+    if not cfg.tie_embeddings:
+        d["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                 ("embed", "vocab"), scale=0.02)
+    return d
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return params["tok"][tokens]
+
+
+def unembed(params: dict, x: jax.Array, ctx: ShardCtx) -> jax.Array:
+    w = params.get("unembed")
+    if w is None:
+        w = params["tok"].T
+    # accumulate in f32 WITHOUT casting the inputs — casting materializes
+    # f32 copies of x and the (huge) unembedding and makes the weight
+    # cotangent f32
+    logits = jnp.einsum("...d,dv->...v", x, w,
+                        preferred_element_type=jnp.float32)
+    return ctx.p(logits, "batch", None, "vocab")
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamSpec((d, ff), ("embed", "mlp")),
+            "w_up": ParamSpec((d, ff), ("embed", "mlp")),
+            "w_down": ParamSpec((ff, d), ("mlp", "embed")),
+        }
+    return {
+        "w_in": ParamSpec((d, ff), ("embed", "mlp")),
+        "w_down": ParamSpec((ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp(params: dict, x: jax.Array, act: str, ctx: ShardCtx) -> jax.Array:
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = ctx.p(g * u, "batch", None, "mlp")
+    else:
+        h = jnp.einsum("...d,df->...f", x, params["w_in"])
+        if act == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            h = jax.nn.gelu(h)
+        h = ctx.p(h, "batch", None, "mlp")
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+
+
+def rope_tables(positions: jax.Array, head_dim: int,
+                theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin (..., head_dim//2), f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, nheads, head_dim); cos/sin (..., S, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1).astype(x.dtype)

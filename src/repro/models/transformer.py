@@ -1,0 +1,302 @@
+"""Decoder-only transformer stack (dense + MoE + VLM prefix variants).
+
+Layers are stacked on a leading axis and iterated with ``jax.lax.scan`` so
+the lowered HLO is O(1) in depth (essential for the 512-device dry-run
+compiles) with selectable per-layer remat.
+
+gemma3's 5:1 local:global pattern is expressed as a per-layer flag vector
+scanned alongside the stacked params; local layers use sliding-window
+masks and the local rope theta (10k) while global layers use the long
+theta — both rope tables are precomputed once and selected per layer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_mod
+from repro.models.attention import (attention_block, attention_decode,
+                                    attention_specs)
+from repro.models.layers import (NO_SHARD, ParamSpec, ShardCtx, embed,
+                                 embed_specs, mlp, mlp_specs, rmsnorm,
+                                 rope_tables, stack_specs, unembed)
+
+LOCAL_ROPE_THETA = 10_000.0
+
+
+def block_specs(cfg: ModelConfig) -> dict:
+    s = {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "attn": attention_specs(cfg),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+    if cfg.family == "moe":
+        s["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        s["mlp"] = mlp_specs(cfg)
+    return s
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": embed_specs(cfg),
+        "blocks": stack_specs(block_specs(cfg), cfg.num_layers),
+        "ln_f": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+
+
+def layer_flags(cfg: ModelConfig) -> jax.Array:
+    """(L,) bool — True where the layer uses GLOBAL attention."""
+    if cfg.local_global_ratio:
+        idx = jnp.arange(cfg.num_layers)
+        return (idx % (cfg.local_global_ratio + 1)) == cfg.local_global_ratio
+    return jnp.ones((cfg.num_layers,), bool)
+
+
+def _mlp_or_moe(layer_params, cfg, h, ctx):
+    if cfg.family == "moe":
+        return moe_mod.moe_mlp(layer_params["moe"], h, cfg, ctx)
+    return mlp(layer_params["mlp"], h, cfg.mlp_act, ctx), 0.0
+
+
+def _layer_window(cfg: ModelConfig, is_global):
+    """Per-layer sliding window; dynamic (traced) for local:global mixes.
+
+    The mask predicate ``k_pos > q_pos - window`` accepts a traced window,
+    so gemma3's 5:1 pattern costs ONE attention per layer (the global
+    layers just get an effectively-infinite window)."""
+    if not cfg.window:
+        return None
+    if cfg.local_global_ratio:
+        return jnp.where(is_global, jnp.int32(2 ** 30), jnp.int32(cfg.window))
+    return cfg.window
+
+
+def _block_fwd(layer_params, x, cfg: ModelConfig, *, is_global, cos_l, sin_l,
+               cos_g, sin_g, prefix_len, q_offset, kv_override=None,
+               causal=True, ctx: ShardCtx):
+    cos = jnp.where(is_global, cos_g, cos_l) if cfg.local_global_ratio else cos_g
+    sin = jnp.where(is_global, sin_g, sin_l) if cfg.local_global_ratio else sin_g
+    h = rmsnorm(x, layer_params["ln1"], cfg.norm_eps)
+    a, kv = attention_block(
+        layer_params["attn"], h, cfg, cos=cos, sin=sin, causal=causal,
+        window=_layer_window(cfg, is_global), prefix_len=prefix_len,
+        q_offset=q_offset, kv_override=kv_override, ctx=ctx)
+    x = ctx.p(x + a, "batch", "seq_sp", "embed")
+    h = rmsnorm(x, layer_params["ln2"], cfg.norm_eps)
+    m, aux = _mlp_or_moe(layer_params, cfg, h, ctx)
+    x = ctx.p(x + m, "batch", "seq_sp", "embed")
+    return x, kv, aux
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,                    # (B, S) int32
+    cfg: ModelConfig,
+    *,
+    prefix_embeds: Optional[jax.Array] = None,   # (B, P, D) VLM stub
+    remat: str = "none",                  # none | full | dots
+    return_cache: bool = False,
+    ctx: ShardCtx = NO_SHARD,
+):
+    """Training/prefill forward.  Returns (logits, aux_loss[, kv caches])."""
+    if (ctx.flag("banded_local", False) and cfg.local_global_ratio
+            and cfg.window and prefix_embeds is None):
+        return forward_banded(params, tokens, cfg, remat=remat,
+                              return_cache=return_cache, ctx=ctx)
+    x = embed(params["embed"], tokens)
+    prefix_len = None
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        prefix_len = prefix_embeds.shape[1]
+    b, s, _ = x.shape
+    x = ctx.p(x, "batch", "seq_sp", "embed")
+    pos = jnp.arange(s)
+    cos_g, sin_g = rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+    cos_l, sin_l = rope_tables(pos, cfg.head_dim, LOCAL_ROPE_THETA)
+    flags = layer_flags(cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        # barrier: keep per-layer converts inside the loop (see optim.adamw)
+        layer_params, is_global = jax.lax.optimization_barrier(xs)
+        x, kv, a = _block_fwd(layer_params, x, cfg, is_global=is_global,
+                              cos_l=cos_l, sin_l=sin_l, cos_g=cos_g,
+                              sin_g=sin_g, prefix_len=prefix_len,
+                              q_offset=0, ctx=ctx)
+        return (x, aux + a), (kv if return_cache else None)
+
+    if remat == "full":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    elif remat == "moe":
+        # save only the post-all-to-all expert buffers: the recompute pass
+        # skips the dispatch/combine collectives (see EXPERIMENTS.md §Perf)
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.save_only_these_names(
+                "moe_in"))
+
+    (x, aux), caches = jax.lax.scan(body, (x, 0.0), (params["blocks"], flags))
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, ctx)
+    if return_cache:
+        return logits, aux, caches
+    return logits, aux
+
+
+def forward_banded(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    remat: str = "none",
+    return_cache: bool = False,
+    ctx: ShardCtx = NO_SHARD,
+):
+    """§Perf variant for local:global archs (gemma3): layers regrouped
+    STATICALLY into (ratio local + 1 global) groups so the local layers use
+    exact O(S·window) banded attention instead of the masked full sweep.
+
+    Identical math to ``forward`` (tests pin it); only the schedule — the
+    lws-style mapping of attention work onto blocks — changes."""
+    ratio = cfg.local_global_ratio
+    gsz = ratio + 1
+    n_full = cfg.num_layers // gsz
+    tail = cfg.num_layers - n_full * gsz           # trailing local layers
+    x = embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    x = ctx.p(x, "batch", "seq_sp", "embed")
+    pos = jnp.arange(s)
+    cos_g, sin_g = rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+    cos_l, sin_l = rope_tables(pos, cfg.head_dim, LOCAL_ROPE_THETA)
+
+    def local_block(lp, x):
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        a, kv = attention_block(lp["attn"], h, cfg, cos=cos_l, sin=sin_l,
+                                window=cfg.window, banded=True, ctx=ctx)
+        x = ctx.p(x + a, "batch", "seq_sp", "embed")
+        h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        m, _ = _mlp_or_moe(lp, cfg, h, ctx)
+        return ctx.p(x + m, "batch", "seq_sp", "embed"), kv
+
+    def global_block(lp, x):
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        a, kv = attention_block(lp["attn"], h, cfg, cos=cos_g, sin=sin_g,
+                                window=None, ctx=ctx)
+        x = ctx.p(x + a, "batch", "seq_sp", "embed")
+        h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        m, _ = _mlp_or_moe(lp, cfg, h, ctx)
+        return ctx.p(x + m, "batch", "seq_sp", "embed"), kv
+
+    grouped = jax.tree.map(
+        lambda a: a[:n_full * gsz].reshape((n_full, gsz) + a.shape[1:]),
+        params["blocks"])
+    tailp = jax.tree.map(lambda a: a[n_full * gsz:], params["blocks"])
+
+    def group_body(x, gp):
+        gp = jax.lax.optimization_barrier(gp)
+        loc = jax.tree.map(lambda a: a[:ratio], gp)
+        glob = jax.tree.map(lambda a: a[ratio], gp)
+        x, kvs_l = jax.lax.scan(lambda xx, lp: local_block(lp, xx), x, loc)
+        x, kv_g = global_block(glob, x)
+        return x, ((kvs_l, kv_g) if return_cache else None)
+
+    if remat == "full":
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, gcaches = jax.lax.scan(group_body, x, grouped)
+
+    def tail_body(x, lp):
+        lp = jax.lax.optimization_barrier(lp)
+        x, kv = local_block(lp, x)
+        return x, (kv if return_cache else None)
+
+    if tail:
+        x, tcaches = jax.lax.scan(tail_body, x, tailp)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, ctx)
+    if not return_cache:
+        return logits, jnp.float32(0.0)
+    # reassemble caches into layer order (L, B, S, G, hd)
+    (kl, vl), (kg, vg) = gcaches
+
+    def weave(loc, glob, tail_c):
+        full = jnp.concatenate([loc, glob[:, None]], axis=1)
+        full = full.reshape((n_full * gsz,) + full.shape[2:])
+        return jnp.concatenate([full, tail_c], 0) if tail else full
+
+    k = weave(kl, kg, tcaches[0] if tail else None)
+    v = weave(vl, vg, tcaches[1] if tail else None)
+    return logits, jnp.float32(0.0), (k, v)
+
+
+# --------------------------------------------------------------------------- #
+# Decode path
+# --------------------------------------------------------------------------- #
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+               expand_kv: bool = False) -> dict:
+    g = cfg.num_heads if expand_kv else max(cfg.num_kv_heads, 1)
+    shape = (cfg.num_layers, batch, max_len, g, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                   expand_kv: bool = False) -> dict:
+    g = cfg.num_heads if expand_kv else max(cfg.num_kv_heads, 1)
+    shape = (cfg.num_layers, batch, max_len, g, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def decode_step(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,                    # (B, 1)
+    cfg: ModelConfig,
+    *,
+    ctx: ShardCtx = NO_SHARD,
+):
+    """One greedy decode step: (logits (B,1,V), updated cache)."""
+    x = embed(params["embed"], tokens)
+    x = ctx.p(x, "batch", None, "embed")
+    pos = cache["pos"]
+    cos_g, sin_g = rope_tables(pos[None], cfg.head_dim, cfg.rope_theta)
+    cos_l, sin_l = rope_tables(pos[None], cfg.head_dim, LOCAL_ROPE_THETA)
+    flags = layer_flags(cfg)
+
+    def body(x, xs):
+        layer_params, is_global, k_c, v_c = jax.lax.optimization_barrier(xs)
+        cos = jnp.where(is_global, cos_g, cos_l) if cfg.local_global_ratio else cos_g
+        sin = jnp.where(is_global, sin_g, sin_l) if cfg.local_global_ratio else sin_g
+        h = rmsnorm(x, layer_params["ln1"], cfg.norm_eps)
+        win = _layer_window(cfg, is_global)
+        a, (k_c, v_c) = attention_decode(
+            layer_params["attn"], h, cfg, k_c, v_c, pos,
+            cos=cos, sin=sin, window=win, ctx=ctx)
+        x = x + a
+        h = rmsnorm(x, layer_params["ln2"], cfg.norm_eps)
+        m, _ = _mlp_or_moe(layer_params, cfg, h, ctx)
+        return x + m, (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["blocks"], flags, cache["k"], cache["v"]))
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, ctx)
+    new_cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+    return logits, new_cache

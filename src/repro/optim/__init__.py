@@ -1,0 +1,10 @@
+"""repro.optim — ZeRO-1 AdamW, schedules, clipping, gradient compression."""
+
+from repro.optim.adamw import (AdamWConfig, adamw_update, clip_by_global_norm,
+                               global_norm, init_opt_state, lr_at)
+from repro.optim.compress import (compress_grads_int8, dequantize_int8,
+                                  hierarchical_psum, quantize_int8)
+
+__all__ = ["AdamWConfig", "adamw_update", "clip_by_global_norm",
+           "global_norm", "init_opt_state", "lr_at", "compress_grads_int8",
+           "dequantize_int8", "hierarchical_psum", "quantize_int8"]

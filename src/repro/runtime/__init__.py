@@ -1,0 +1,6 @@
+"""repro.runtime — sharding rules, fault tolerance, straggler handling."""
+from repro.runtime.fault import (FailureInjector, RestartStats,
+                                 SimulatedFailure, run_with_restarts,
+                                 shrink_data_axis, reshard_state)
+from repro.runtime.straggler import (StragglerMonitor, StragglerPolicy,
+                                     Rebalance)

@@ -1,0 +1,88 @@
+"""Straggler detection and mitigation.
+
+In SPMD training one slow host gates every step (the collective waits).
+The monitor tracks per-step wall times with a robust (median + MAD)
+estimator; hosts whose EWMA exceeds ``threshold x median`` are flagged.
+Mitigation = re-partition the deterministic data stream over the fast
+hosts (the same (shard, n_shards) mechanism the elastic runtime uses), or
+— below ``evict_threshold`` — hand the host to fault handling.
+
+This is control-plane logic: pure, deterministic, and unit-tested with
+synthetic timing traces; the SPMD data plane is untouched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Optional
+
+
+@dataclasses.dataclass
+class HostStats:
+    ewma: float = 0.0
+    count: int = 0
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    slow_factor: float = 1.5       # flag if ewma > factor * fleet median
+    evict_factor: float = 3.0      # evict if ewma > evict_factor * median
+    alpha: float = 0.3             # EWMA smoothing
+    min_samples: int = 5
+
+
+@dataclasses.dataclass
+class Rebalance:
+    """New data partition: host -> (shard, n_shards); evicted hosts get
+    no shard and should be handed to fault handling."""
+    assignments: dict[int, tuple[int, int]]
+    flagged: list[int]
+    evicted: list[int]
+
+
+class StragglerMonitor:
+    def __init__(self, n_hosts: int,
+                 policy: Optional[StragglerPolicy] = None):
+        self.n_hosts = n_hosts
+        self.policy = policy or StragglerPolicy()
+        self.stats = {h: HostStats() for h in range(n_hosts)}
+
+    def record_step(self, host_times: dict[int, float]):
+        a = self.policy.alpha
+        for h, t in host_times.items():
+            s = self.stats[h]
+            s.ewma = t if s.count == 0 else (1 - a) * s.ewma + a * t
+            s.count += 1
+
+    def median_ewma(self) -> float:
+        vals = [s.ewma for s in self.stats.values() if s.count > 0]
+        return statistics.median(vals) if vals else 0.0
+
+    def flagged(self) -> list[int]:
+        med = self.median_ewma()
+        if med <= 0:
+            return []
+        return [h for h, s in self.stats.items()
+                if s.count >= self.policy.min_samples
+                and s.ewma > self.policy.slow_factor * med]
+
+    def evictable(self) -> list[int]:
+        med = self.median_ewma()
+        if med <= 0:
+            return []
+        return [h for h, s in self.stats.items()
+                if s.count >= self.policy.min_samples
+                and s.ewma > self.policy.evict_factor * med]
+
+    def rebalance(self) -> Rebalance:
+        """Drop evictable hosts from the data partition; survivors get a
+        fresh contiguous (shard, n_shards) assignment."""
+        evicted = set(self.evictable())
+        survivors = [h for h in range(self.n_hosts) if h not in evicted]
+        n = len(survivors)
+        return Rebalance(
+            assignments={h: (i, n) for i, h in enumerate(survivors)},
+            flagged=self.flagged(),
+            evicted=sorted(evicted),
+        )

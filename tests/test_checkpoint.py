@@ -1,0 +1,88 @@
+"""Checkpoints: roundtrip, atomicity, keep-k, async, integrity."""
+
+import json
+import pathlib
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def tree(seed=0):
+    k = jax.random.key(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 16)),
+                       "b": jnp.zeros((16,), jnp.bfloat16)},
+            "opt": {"step": jnp.int32(7)}}
+
+
+def test_roundtrip(tmp_path):
+    c = Checkpointer(tmp_path, keep=3)
+    t = tree()
+    c.save(10, t, blocking=True)
+    restored, step = c.restore(tree(seed=1))
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_async_save(tmp_path):
+    c = Checkpointer(tmp_path, keep=3)
+    c.save(1, tree())
+    c.wait()
+    assert c.latest_step() == 1
+
+
+def test_keep_last_k(tmp_path):
+    c = Checkpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        c.save(s, tree(), blocking=True)
+    assert c.all_steps() == [3, 4]
+
+
+def test_atomicity_tmp_dirs_invisible(tmp_path):
+    c = Checkpointer(tmp_path, keep=3)
+    # a crashed save leaves only a .tmp dir — restore must ignore it
+    broken = pathlib.Path(tmp_path) / "step_00000099.tmp"
+    broken.mkdir()
+    (broken / "leaf_000000.npy").write_bytes(b"garbage")
+    assert c.latest_step() is None
+    c.save(5, tree(), blocking=True)
+    assert c.latest_step() == 5
+
+
+def test_restore_specific_step(tmp_path):
+    c = Checkpointer(tmp_path, keep=5)
+    for s in (1, 2, 3):
+        t = jax.tree.map(lambda x: x + s, tree())
+        c.save(s, t, blocking=True)
+    restored, step = c.restore(tree(), step=2)
+    assert step == 2
+    want = jax.tree.map(lambda x: x + 2, tree())
+    np.testing.assert_allclose(
+        np.asarray(restored["params"]["w"]),
+        np.asarray(want["params"]["w"]), atol=1e-6)
+
+
+def test_corruption_detected(tmp_path):
+    c = Checkpointer(tmp_path, keep=3)
+    c.save(1, tree(), blocking=True)
+    d = pathlib.Path(tmp_path) / "step_00000001"
+    # truncate a leaf to a wrong shape
+    np.save(d / "leaf_000000.npy", np.zeros((2, 2)))
+    with pytest.raises((ValueError, KeyError)):
+        c.restore(tree())
+
+
+def test_missing_leaf_detected(tmp_path):
+    c = Checkpointer(tmp_path, keep=3)
+    c.save(1, tree(), blocking=True)
+    extra = dict(tree())
+    extra["new_key"] = jnp.zeros((3,))
+    with pytest.raises(KeyError):
+        c.restore(extra)

@@ -1,0 +1,102 @@
+"""Fault tolerance + stragglers: restart recovery, bounded work loss,
+elastic shrink, straggler detection and rebalancing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.runtime.fault import (FailureInjector, SimulatedFailure,
+                                 run_with_restarts, shrink_data_axis)
+from repro.runtime.straggler import StragglerMonitor, StragglerPolicy
+
+
+def counter_state():
+    return {"x": jnp.zeros(())}, 0
+
+
+def step_fn(state, step):
+    return {"x": state["x"] + 1}
+
+
+class TestRestarts:
+    def test_no_failures(self, tmp_path):
+        c = Checkpointer(tmp_path, keep=2)
+        state, stats = run_with_restarts(
+            counter_state, step_fn, total_steps=10, checkpointer=c,
+            save_every=3)
+        assert float(state["x"]) == 10
+        assert stats.restarts == 0
+
+    def test_recovers_from_failures(self, tmp_path):
+        c = Checkpointer(tmp_path, keep=2)
+        inj = FailureInjector(fail_at_steps=(5, 11))
+        state, stats = run_with_restarts(
+            counter_state, step_fn, total_steps=15, checkpointer=c,
+            save_every=3, injector=inj)
+        assert float(state["x"]) == 15        # correct final state
+        assert stats.restarts == 2
+
+    def test_work_loss_bounded_by_save_every(self, tmp_path):
+        save_every = 4
+        c = Checkpointer(tmp_path, keep=2)
+        inj = FailureInjector(fail_at_steps=(9,))
+        _, stats = run_with_restarts(
+            counter_state, step_fn, total_steps=12, checkpointer=c,
+            save_every=save_every, injector=inj)
+        assert stats.steps_lost <= save_every
+
+    def test_failure_before_first_checkpoint(self, tmp_path):
+        c = Checkpointer(tmp_path, keep=2)
+        inj = FailureInjector(fail_at_steps=(1,))
+        state, stats = run_with_restarts(
+            counter_state, step_fn, total_steps=5, checkpointer=c,
+            save_every=100, injector=inj)
+        assert float(state["x"]) == 5         # cold restart still finishes
+
+
+class TestElastic:
+    def test_shrink_data_axis(self):
+        mesh = shrink_data_axis(new_data=1, model=1)
+        assert dict(mesh.shape) == {"data": 1, "model": 1}
+
+    def test_shrink_too_far_raises(self):
+        with pytest.raises(ValueError):
+            shrink_data_axis(new_data=64, model=64)
+
+
+class TestStragglers:
+    def test_flags_slow_host(self):
+        m = StragglerMonitor(4, StragglerPolicy(min_samples=3))
+        for _ in range(6):
+            m.record_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 2.5})
+        assert m.flagged() == [3]
+        assert m.evictable() == []
+
+    def test_evicts_and_rebalances(self):
+        m = StragglerMonitor(4, StragglerPolicy(min_samples=3))
+        for _ in range(6):
+            m.record_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 10.0})
+        rb = m.rebalance()
+        assert rb.evicted == [3]
+        assert set(rb.assignments) == {0, 1, 2}
+        shards = sorted(s for s, n in rb.assignments.values())
+        assert shards == [0, 1, 2]
+        assert all(n == 3 for _, n in rb.assignments.values())
+
+    def test_healthy_fleet_untouched(self):
+        m = StragglerMonitor(8)
+        for _ in range(10):
+            m.record_step({h: 1.0 + 0.02 * h for h in range(8)})
+        rb = m.rebalance()
+        assert rb.evicted == [] and rb.flagged == []
+        assert len(rb.assignments) == 8
+
+    def test_transient_blip_forgiven(self):
+        """EWMA: one slow step does not flag a host."""
+        m = StragglerMonitor(2, StragglerPolicy(min_samples=3, alpha=0.3))
+        m.record_step({0: 1.0, 1: 20.0})     # blip
+        for _ in range(10):
+            m.record_step({0: 1.0, 1: 1.0})
+        assert m.flagged() == []

@@ -1,0 +1,205 @@
+"""Per-kernel allclose sweeps: every Pallas kernel (interpret mode) vs its
+pure-jnp oracle, across shapes, dtypes and mapping policies."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hw import TPU_REGISTRY
+from repro.core.mapper import MappingPolicy
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gcn_agg import gcn_aggregate_pallas
+from repro.kernels.matmul import matmul_pallas
+from repro.kernels.nn_search import nn_search_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.saxpy import saxpy_pallas
+from repro.kernels.stencil import gaussian_blur_pallas
+from repro.kernels.vecadd import vecadd_pallas
+
+HW = TPU_REGISTRY["cpu_sim"]
+POLICIES = list(MappingPolicy)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    x = jax.random.normal(jax.random.key(key), shape, jnp.float32) * scale
+    return x.astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+
+
+def close(a, b, dtype=jnp.float32, **kw):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               **(tol(dtype) | kw))
+
+
+@pytest.mark.parametrize("n", [128, 1000, 4096, 5001])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_vecadd(n, policy):
+    x, y = rand(0, (n,)), rand(1, (n,))
+    close(vecadd_pallas(x, y, hw=HW, policy=policy, interpret=True),
+          ref.vecadd(x, y))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vecadd_dtypes(dtype):
+    x, y = rand(0, (2048,), dtype), rand(1, (2048,), dtype)
+    close(vecadd_pallas(x, y, hw=HW, interpret=True), ref.vecadd(x, y),
+          dtype)
+
+
+@pytest.mark.parametrize("n", [256, 3000])
+def test_saxpy(n):
+    x, y, a = rand(0, (n,)), rand(1, (n,)), jnp.float32(1.7)
+    close(saxpy_pallas(a, x, y, hw=HW, interpret=True), ref.saxpy(a, x, y))
+
+
+@pytest.mark.parametrize("mnk", [(64, 64, 64), (200, 300, 250),
+                                 (128, 256, 512), (7, 13, 9)])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_matmul_shapes(mnk, policy):
+    m, n, k = mnk
+    a, b = rand(0, (m, k), scale=0.5), rand(1, (k, n), scale=0.5)
+    close(matmul_pallas(a, b, hw=HW, policy=policy, interpret=True),
+          ref.matmul(a, b))
+
+
+def test_matmul_bf16():
+    a = rand(0, (128, 128), jnp.bfloat16)
+    b = rand(1, (128, 128), jnp.bfloat16)
+    close(matmul_pallas(a, b, hw=HW, interpret=True), ref.matmul(a, b),
+          jnp.bfloat16)
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (100, 96), (300, 256)])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_gaussian_blur(shape, policy):
+    img = rand(0, shape)
+    close(gaussian_blur_pallas(img, hw=HW, policy=policy, interpret=True),
+          ref.gaussian_blur(img), atol=1e-5)
+
+
+@pytest.mark.parametrize("ksize", [3, 5, 7])
+def test_gaussian_blur_ksize(ksize):
+    img = rand(0, (64, 64))
+    close(gaussian_blur_pallas(img, hw=HW, ksize=ksize, interpret=True),
+          ref.gaussian_blur(img, ksize=ksize), atol=1e-5)
+
+
+@pytest.mark.parametrize("nq,nr,d", [(64, 128, 8), (100, 300, 16),
+                                     (17, 511, 4)])
+def test_nn_search(nq, nr, d):
+    q, r = rand(0, (nq, d)), rand(1, (nr, d))
+    idx, dist = nn_search_pallas(q, r, hw=HW, interpret=True, block_r=128)
+    ridx, rdist = ref.nn_search(q, r)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    close(dist, rdist, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,f,density", [(128, 32, 0.05), (200, 64, 0.02),
+                                         (64, 128, 0.5)])
+def test_gcn_aggregate(n, f, density):
+    adj = (jax.random.uniform(jax.random.key(0), (n, n)) < density
+           ).astype(jnp.float32)
+    adjn = adj / jnp.maximum(adj.sum(1, keepdims=True), 1)
+    feats = rand(1, (n, f))
+    close(gcn_aggregate_pallas(adjn, feats, hw=HW, interpret=True,
+                               block_s=64),
+          ref.gcn_aggregate(adjn, feats), atol=1e-5)
+
+
+def test_gcn_matches_edge_list_oracle():
+    """dense-tile SpMM == segment-sum over the edge list."""
+    n, f = 96, 16
+    adj = (jax.random.uniform(jax.random.key(3), (n, n)) < 0.1
+           ).astype(jnp.float32)
+    feats = rand(1, (n, f))
+    src, dst = jnp.nonzero(adj.T)
+    w = adj.T[src, dst]
+    dense = ref.gcn_aggregate(adj, feats)
+    edges = ref.gcn_aggregate_edges(src, dst, w, feats, n)
+    close(dense, edges, atol=1e-5)
+
+
+@pytest.mark.parametrize("rows,d", [(64, 256), (300, 512), (1000, 128)])
+def test_rmsnorm(rows, d):
+    x, g = rand(0, (rows, d)), rand(1, (d,))
+    close(rmsnorm_pallas(x, g, hw=HW, interpret=True), ref.rmsnorm(x, g),
+          rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("sq,skv,causal", [(128, 128, True),
+                                           (128, 128, False),
+                                           (100, 256, True),
+                                           (64, 64, True)])
+def test_flash_attention(sq, skv, causal):
+    d = 64
+    q = rand(0, (sq, d), scale=0.5)
+    k = rand(1, (skv, d), scale=0.5)
+    v = rand(2, (skv, d), scale=0.5)
+    close(flash_attention_pallas(q, k, v, hw=HW, causal=causal,
+                                 interpret=True),
+          ref.attention(q, k, v, causal=causal), rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_bf16():
+    q = rand(0, (128, 128), jnp.bfloat16, 0.5)
+    k = rand(1, (128, 128), jnp.bfloat16, 0.5)
+    v = rand(2, (128, 128), jnp.bfloat16, 0.5)
+    close(flash_attention_pallas(q, k, v, hw=HW, interpret=True),
+          ref.attention(q, k, v), jnp.bfloat16)
+
+
+@pytest.mark.parametrize("s,clen", [(512, 512), (1024, 700), (256, 1)])
+def test_decode_attention(s, clen):
+    d = 64
+    q = rand(0, (d,), scale=0.5)
+    kc = rand(1, (s, d), scale=0.5)
+    vc = rand(2, (s, d), scale=0.5)
+    close(decode_attention_pallas(q, kc, vc, clen, hw=HW, interpret=True),
+          ref.decode_attention(q, kc, vc, jnp.int32(clen)),
+          rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunked_vs_sequential():
+    """the chunked SSD (training path) == step recurrence (decode path)."""
+    L, H, P, G, N = 128, 4, 16, 2, 8
+    x = rand(0, (L, H, P), scale=0.5)
+    a = -jnp.abs(rand(1, (L, H))) * 0.1
+    b = rand(2, (L, G, N), scale=0.3)
+    c = rand(3, (L, G, N), scale=0.3)
+    for chunk in (16, 32, 128):
+        close(ref.ssd_chunked(x, a, b, c, chunk=chunk),
+              ref.ssd_sequential(x, a, b, c), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("chunk", [32, 64, 128])
+def test_ssd_pallas_kernel(chunk):
+    """Pallas SSD grid-sequential kernel == O(L) recurrence oracle."""
+    from repro.kernels.ssd import ssd_pallas
+    L, H, P, G, N = 256, 4, 32, 2, 16
+    x = rand(0, (L, H, P), scale=0.5)
+    a = -jnp.abs(rand(1, (L, H))) * 0.1
+    b = rand(2, (L, G, N), scale=0.3)
+    c = rand(3, (L, G, N), scale=0.3)
+    got = ssd_pallas(x, a, b, c, chunk=chunk, interpret=True)
+    want = ref.ssd_sequential(x, a, b, c)
+    close(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_pallas_ragged_chunk():
+    from repro.kernels.ssd import ssd_pallas
+    L, H, P, G, N = 192, 2, 16, 1, 8
+    x = rand(0, (L, H, P), scale=0.5)
+    a = -jnp.abs(rand(1, (L, H))) * 0.1
+    b = rand(2, (L, G, N), scale=0.3)
+    c = rand(3, (L, G, N), scale=0.3)
+    # 192 % 128 != 0 -> planner halves the chunk until it divides
+    got = ssd_pallas(x, a, b, c, chunk=128, interpret=True)
+    close(got, ref.ssd_sequential(x, a, b, c), rtol=1e-3, atol=1e-3)

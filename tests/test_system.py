@@ -1,0 +1,106 @@
+"""End-to-end behaviour tests: training convergence, fault-tolerant runs,
+serving, mapping-policy selection — the whole stack on CPU."""
+
+import numpy as np
+import pytest
+
+from repro.core.mapper import MappingPolicy
+from repro.launch.serve import serve_batch
+from repro.launch.train import train
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        run = train("smollm-135m", steps=25, global_batch=8, seq_len=64,
+                    verbose=False)
+        first = np.mean(run.losses[:5])
+        last = np.mean(run.losses[-5:])
+        assert last < first - 0.5, (first, last)
+
+    def test_deterministic_given_seed(self):
+        r1 = train("smollm-135m", steps=5, global_batch=4, seq_len=32,
+                   verbose=False, seed=3)
+        r2 = train("smollm-135m", steps=5, global_batch=4, seq_len=32,
+                   verbose=False, seed=3)
+        np.testing.assert_allclose(r1.losses, r2.losses, rtol=1e-5)
+
+    def test_microbatched_equals_single_batch_loss_curve(self):
+        """gradient accumulation is numerically equivalent-ish."""
+        r1 = train("smollm-135m", steps=8, global_batch=8, seq_len=32,
+                   verbose=False)
+        # force microbatching by shrinking the pipeline through policy:
+        # naive policy = microbatch of 1 sequence (lws=1 analogue)
+        r2 = train("smollm-135m", steps=8, global_batch=8, seq_len=32,
+                   policy=MappingPolicy.NAIVE, verbose=False)
+        np.testing.assert_allclose(r1.losses, r2.losses, rtol=0.05, atol=0.1)
+
+    def test_remat_matches_no_remat(self):
+        r1 = train("smollm-135m", steps=6, global_batch=4, seq_len=32,
+                   remat="none", verbose=False)
+        r2 = train("smollm-135m", steps=6, global_batch=4, seq_len=32,
+                   remat="full", verbose=False)
+        np.testing.assert_allclose(r1.losses, r2.losses, rtol=1e-3,
+                                   atol=1e-3)
+
+    def test_compressed_grads_still_learn(self):
+        run = train("smollm-135m", steps=25, global_batch=8, seq_len=64,
+                    compress_grads=True, verbose=False)
+        assert np.mean(run.losses[-5:]) < np.mean(run.losses[:5]) - 0.3
+
+    @pytest.mark.parametrize("arch", ["mamba2-1.3b", "deepseek-moe-16b"])
+    def test_other_families_learn(self, arch):
+        run = train(arch, steps=20, global_batch=8, seq_len=64,
+                    verbose=False)
+        assert np.mean(run.losses[-5:]) < np.mean(run.losses[:5]) - 0.2
+
+
+class TestFaultTolerantTraining:
+    def test_restart_resumes_from_checkpoint(self, tmp_path):
+        run = train("smollm-135m", steps=20, global_batch=4, seq_len=32,
+                    ckpt_dir=str(tmp_path), save_every=5,
+                    fail_at=(12,), verbose=False)
+        assert run.restarts == 1
+        assert run.steps == 20
+        # loss history covers the replayed region too
+        assert len(run.losses) >= 20
+
+    def test_failure_recovery_reaches_same_loss(self, tmp_path):
+        clean = train("smollm-135m", steps=15, global_batch=4, seq_len=32,
+                      verbose=False)
+        faulty = train("smollm-135m", steps=15, global_batch=4, seq_len=32,
+                       ckpt_dir=str(tmp_path), save_every=5,
+                       fail_at=(7,), verbose=False)
+        # deterministic data + checkpoint restore => same final loss
+        np.testing.assert_allclose(clean.losses[-1], faulty.losses[-1],
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestServing:
+    def test_serve_batch_greedy(self):
+        prompts = [[1, 2, 3], [4, 5, 6, 7, 8], [9]]
+        stats = serve_batch("smollm-135m", prompts, max_new_tokens=6,
+                            verbose=False)
+        assert stats.n_requests == 3
+        for p, out in zip(prompts, stats.outputs):
+            assert len(out) == len(p) + 6
+            assert out[:len(p)] == p
+
+    def test_decode_is_deterministic(self):
+        prompts = [[1, 2, 3, 4]]
+        s1 = serve_batch("smollm-135m", prompts, max_new_tokens=5,
+                         verbose=False)
+        s2 = serve_batch("smollm-135m", prompts, max_new_tokens=5,
+                         verbose=False)
+        assert s1.outputs == s2.outputs
+
+
+class TestMappingPolicies:
+    """the paper's three policies all function end-to-end; AUTO resolves
+    at runtime without programmer input (the headline capability)."""
+
+    @pytest.mark.parametrize("policy", list(MappingPolicy))
+    def test_policy_trains(self, policy):
+        run = train("smollm-135m", steps=4, global_batch=8, seq_len=32,
+                    policy=policy, verbose=False)
+        assert len(run.losses) == 4
+        assert all(np.isfinite(l) for l in run.losses)

@@ -1,0 +1,75 @@
+"""Trace simulator: Fig. 1 regimes + Fig. 2 aggregate reproduction."""
+
+import statistics
+
+import pytest
+
+from repro.core.hw import VortexParams
+from repro.core.mapper import Regime, resolve_lws
+from repro.core.tracesim import (paper_config_grid, simulate,
+                                 simulate_policy, sweep_configs)
+from repro.core.workload import MATH_KERNELS, PAPER_KERNELS, vecadd
+
+
+class TestFig1Regimes:
+    """The paper's Fig. 1 experiment: vecadd(128) on 1c2w4t."""
+
+    CFG = VortexParams(cores=1, warps=2, threads=4)
+    W = vecadd(128)
+
+    def test_call_counts(self):
+        assert simulate(self.W, self.CFG, 1).calls == 16
+        assert simulate(self.W, self.CFG, 16).calls == 1
+        assert simulate(self.W, self.CFG, 32).calls == 1
+
+    def test_regimes(self):
+        assert simulate(self.W, self.CFG, 1).regime is Regime.OVERSUBSCRIBED
+        assert simulate(self.W, self.CFG, 16).regime is Regime.EXACT
+        assert simulate(self.W, self.CFG, 64).regime is Regime.UNDERSUBSCRIBED
+
+    def test_eq1_is_optimal_here(self):
+        lws_opt = resolve_lws(self.W.gws, self.CFG.hp)
+        c_opt = simulate(self.W, self.CFG, lws_opt).cycles
+        for lws in (1, 2, 4, 32, 64, 128):
+            assert simulate(self.W, self.CFG, lws).cycles >= c_opt
+
+    def test_trace_events_cover_all_calls(self):
+        res = simulate(self.W, self.CFG, 1, trace=True)
+        assert res.events
+        assert max(e.call for e in res.events) == res.calls - 1
+        assert max(e.t_end for e in res.events) <= res.cycles
+
+
+class TestFig2Sweep:
+    def test_grid_is_450(self):
+        assert len(paper_config_grid()) == 450
+
+    def test_auto_never_catastrophic(self):
+        """ours is within 5% of the best of the three policies everywhere
+        (the paper's 'small benefits' cases stay small)."""
+        for name in ("vecadd", "sgemm"):
+            for row in sweep_configs(PAPER_KERNELS[name]):
+                best = min(row["auto_cycles"], row["naive_cycles"],
+                           row["fixed_cycles"])
+                assert row["auto_cycles"] <= best * 1.25, (name, row)
+
+    def test_paper_headline_claims(self):
+        """avg 1.3x over naive, 3.7x over fixed on math kernels (paper §3),
+        tails <= ~20x; reproduced within 15%."""
+        agg_n, agg_f = [], []
+        for name in MATH_KERNELS:
+            for row in sweep_configs(PAPER_KERNELS[name]):
+                agg_n.append(row["ratio_naive"])
+                agg_f.append(row["ratio_fixed"])
+        naive_avg = statistics.mean(agg_n)
+        fixed_avg = statistics.mean(agg_f)
+        assert abs(naive_avg - 1.3) < 0.2, naive_avg
+        assert abs(fixed_avg - 3.7) < 0.6, fixed_avg
+        assert max(max(agg_n), max(agg_f)) < 25.0
+
+    def test_hp_exceeds_gws_peak_at_ratio_1(self):
+        """paper §3: when hp > gws, Eq.1 gives lws=1 == naive -> ratio 1."""
+        w = PAPER_KERNELS["vecadd"]
+        for row in sweep_configs(w):
+            if row["hp"] >= w.gws:
+                assert row["ratio_naive"] == pytest.approx(1.0)
