@@ -1,6 +1,7 @@
 """Kernel microbenchmarks: the paper suite as REAL Pallas kernels.
 
-Each kernel runs under the three mapping policies (naive / fixed / auto).
+Each kernel runs under the four mapping policies (naive / fixed / auto /
+tuned — the last routed through the tuner dispatch cache).
 On CPU the kernels execute in interpret mode, so ``us_per_call`` is a
 functional-correctness-grade wall time; the ``derived`` column is the
 hardware-model cycle count from the trace simulator (the number the

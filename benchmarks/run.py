@@ -5,7 +5,8 @@
 Sections:
   fig1   execution-trace regimes (paper Fig. 1)
   fig2   450-config mapping-policy sweep (paper Fig. 2 + headline claims)
-  kern   Pallas kernel suite under the 3 policies (``name,us_per_call,derived``)
+  kern   Pallas kernel suite under the 4 policies (``name,us_per_call,derived``)
+  tuner  tuning-cache dispatch: warm overhead vs cold refine + policy sweep
   roof   roofline table from the dry-run records (single + multi mesh)
 """
 
@@ -15,7 +16,8 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import fig1_trace, fig2_sweep, kernel_bench, roofline_table
+    from benchmarks import (fig1_trace, fig2_sweep, kernel_bench,
+                            roofline_table, tuner_bench)
 
     print("=" * 74)
     print("== fig1_trace: Vortex execution regimes (paper Fig. 1)")
@@ -47,6 +49,12 @@ def main() -> None:
     print("=" * 74)
     print("name,us_per_call,derived")
     kernel_bench.run()
+
+    print()
+    print("=" * 74)
+    print("== tuner_bench: cache dispatch overhead + NAIVE/FIXED/AUTO/TUNED")
+    print("=" * 74)
+    tuner_bench.run()
 
     print()
     print("=" * 74)

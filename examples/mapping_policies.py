@@ -1,9 +1,11 @@
 """The paper's central experiment at framework scale: train the same model
-under the three mapping policies and compare the runtime-resolved plans.
+under the four mapping policies and compare the runtime-resolved plans.
 
 naive  = lws-1 analogue  (microbatch of 1 sequence, minimal blocks)
 fixed  = lws-32 analogue (constant microbatch/block sizes)
 auto   = Eq. 1           (resolved from hardware + workload at runtime)
+tuned  = Eq. 1 refined + memoized by repro.tuner (mesh tier: clean
+         fallback to auto — no cost model there)
 
     PYTHONPATH=src python examples/mapping_policies.py
 """
@@ -27,7 +29,7 @@ for pol in MappingPolicy:
     print(f"{pol.value:5s}: per-device batch={mb.per_device_batch} "
           f"microbatches={mb.num_microbatches} ({mb.regime.value})")
 
-# --- and the same three policies training end-to-end ----------------------
+# --- and the same policies training end-to-end ----------------------------
 print()
 for pol in MappingPolicy:
     t0 = time.time()

@@ -1,8 +1,9 @@
 """Quickstart — the paper's technique in 30 lines.
 
 Resolve Eq. 1 (lws = gws / hp) at runtime for a kernel and hardware,
-simulate the three mapping policies, and run the real Pallas kernel with
-the auto-resolved BlockSpec.
+simulate the four mapping policies, and run the real Pallas kernel with
+the auto-resolved BlockSpec — then once more through the tuner dispatch
+layer, whose second call is a pure cache hit.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -20,7 +21,7 @@ from repro.kernels.vecadd import vecadd_pallas
 w = vecadd_workload(4096)
 cfg = VortexParams(cores=4, warps=8, threads=16)           # 4c8w16t
 print(f"kernel gws={w.gws}, hp={cfg.hp} -> Eq.1 lws={resolve_lws(w.gws, cfg.hp)}")
-for pol in ("naive", "fixed", "auto"):
+for pol in ("naive", "fixed", "auto", "tuned"):
     r = simulate_policy(w, cfg, pol)
     print(f"  {pol:5s}: lws={r.lws:4d} calls={r.calls:3d} "
           f"cycles={r.cycles:7d} ({r.regime.value})")
@@ -35,3 +36,14 @@ y = 2.0 * x
 out = vecadd_pallas(x, y, hw=hw, plan=plan, interpret=True)
 assert jnp.allclose(out, 3.0 * x)
 print("pallas vecadd with auto-resolved BlockSpec: OK")
+
+# --- 3. the tuned dispatch layer: refine once, cache-hit forever ----------
+from repro.tuner import TuningCache, tuned_call
+
+cache = TuningCache(path=None)          # pass a path to persist across runs
+out = tuned_call("vecadd", x, y, hw=hw, cache=cache, interpret=True)  # cold
+out = tuned_call("vecadd", x, y, hw=hw, cache=cache, interpret=True)  # warm
+assert jnp.allclose(out, 3.0 * x)
+s = cache.stats
+print(f"tuner dispatch: {s.misses} miss ({s.refine_probes} refine probes), "
+      f"{s.hits} hit (0 probes)")

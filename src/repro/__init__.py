@@ -4,6 +4,7 @@ and extending it into a multi-pod TPU training/serving stack.
 
 Layers:
   repro.core       the paper's runtime mapping technique (Eq. 1) + roofline
+  repro.tuner      persistent tuning cache + unified kernel dispatch (TUNED)
   repro.kernels    Pallas TPU kernels with mapper-chosen BlockSpecs
   repro.models     LM model zoo (dense / MoE / SSM / hybrid / enc-dec / VLM)
   repro.data       deterministic sharded data pipeline

@@ -1,6 +1,7 @@
 """repro.core — runtime micro-architecture parameter analysis (the paper's
 contribution): hardware introspection, Eq. 1 mapping, trace simulation,
-roofline extraction, and the beyond-paper autotune refinement."""
+roofline extraction, and the beyond-paper autotune refinement that the
+``repro.tuner`` dispatch layer builds on (MappingPolicy.TUNED)."""
 
 from repro.core.hw import TpuParams, VortexParams, TPU_REGISTRY, detect
 from repro.core.mapper import (
@@ -17,6 +18,9 @@ from repro.core.mapper import (
     plan_attention_blocks,
     plan_microbatch,
     plan_moe_capacity,
+    vector_plan_for_block,
+    matmul_plan_for_blocks,
+    attention_plan_for_blocks,
 )
 from repro.core.workload import Workload, PAPER_KERNELS
 from repro.core.tracesim import simulate, simulate_policy, sweep_configs, paper_config_grid
@@ -35,6 +39,8 @@ __all__ = [
     "BlockPlan", "MatmulPlan", "AttentionPlan", "MeshPlan",
     "plan_vector_blocks", "plan_matmul_blocks", "plan_attention_blocks",
     "plan_microbatch", "plan_moe_capacity",
+    "vector_plan_for_block", "matmul_plan_for_blocks",
+    "attention_plan_for_blocks",
     "Workload", "PAPER_KERNELS",
     "simulate", "simulate_policy", "sweep_configs", "paper_config_grid",
     "TPU_V5E", "RooflineReport", "collective_stats_from_hlo",

@@ -10,7 +10,9 @@ near-optimal the search terminates in a handful of probes — cheap enough
 to run inside the runtime mapper.
 
 The same machinery refines Pallas block plans using the roofline cost of a
-candidate block (compute/memory max) as the objective.
+candidate block (compute/memory max) as the objective — that is how the
+``repro.tuner`` dispatch layer refines cache misses under
+``MappingPolicy.TUNED`` (see docs/TUNING.md).
 """
 
 from __future__ import annotations

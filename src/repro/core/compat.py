@@ -1,0 +1,77 @@
+"""Version-compatibility shims for the span of jax releases the repo runs on.
+
+Two facts of life on older jax (0.4.x, the version baked into this
+container) are papered over here so the rest of the code can stay on the
+modern idiom:
+
+  * ``jax.lax.optimization_barrier`` exists but has NO differentiation
+    rule — ``opt_barrier`` feature-detects that once and substitutes a
+    ``custom_vjp`` identity-gradient wrapper (the barrier still lands in
+    the forward HLO; only the cotangent barrier is dropped);
+  * ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)``
+    do not exist — ``launch.mesh.make_mesh_compat`` handles that.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+__all__ = ["opt_barrier", "tpu_compiler_params", "shard_map_compat"]
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across its graduation from
+    ``jax.experimental.shard_map`` (where the no-check kwarg is
+    ``check_rep`` rather than ``check_vma``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check)
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams(...)`` across the rename from the older
+    ``pltpu.TPUCompilerParams``."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
+
+@jax.custom_vjp
+def _barrier_identity_grad(x):
+    return jax.lax.optimization_barrier(x)
+
+
+def _barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _barrier_bwd(_, g):
+    return (g,)
+
+
+_barrier_identity_grad.defvjp(_barrier_fwd, _barrier_bwd)
+
+
+@functools.lru_cache(maxsize=None)
+def _barrier_is_differentiable() -> bool:
+    try:
+        jax.grad(lambda x: jax.lax.optimization_barrier(x))(1.0)
+        return True
+    except NotImplementedError:
+        return False
+
+
+def opt_barrier(x):
+    """``jax.lax.optimization_barrier`` usable under ``jax.grad`` on every
+    supported jax version.  Takes/returns one pytree, like the primitive."""
+    if _barrier_is_differentiable():
+        return jax.lax.optimization_barrier(x)
+    return _barrier_identity_grad(x)

@@ -10,12 +10,19 @@ policies the paper compares against:
     of both workload and hardware;
   * ``AUTO``  — Eq. 1 resolved at runtime from the detected hardware
     parameters, then rounded to the lane-tile quanta and clamped by the
-    VMEM budget.
+    VMEM budget;
+  * ``TUNED`` — the AUTO seed refined by the ``repro.tuner`` subsystem:
+    ``tuner.dispatch`` hill-climbs the cost model around the Eq. 1 seed
+    (the paper's §3 "small benefits" observation) and memoizes the winner
+    in a persistent hardware-keyed cache.  Inside this module TUNED plans
+    identically to AUTO — the refinement happens in the dispatch layer.
 
 All planners are pure functions of (workload, hardware, policy): they can be
 called at trace time inside ``jax.jit`` staging, which is the TPU equivalent
 of the paper's "evaluated at runtime ... without being explicitly specified
-by the programmer".
+by the programmer".  The ``*_plan_for_block*`` helpers rebuild a full plan
+from just the tuned decision variables (block sizes), so cached tuning
+entries only need to persist those.
 """
 
 from __future__ import annotations
@@ -41,6 +48,9 @@ __all__ = [
     "plan_attention_blocks",
     "plan_microbatch",
     "plan_moe_capacity",
+    "vector_plan_for_block",
+    "matmul_plan_for_blocks",
+    "attention_plan_for_blocks",
 ]
 
 FIXED_LWS = 32          # the paper's fixed baseline
@@ -52,6 +62,7 @@ class MappingPolicy(str, enum.Enum):
     NAIVE = "naive"
     FIXED = "fixed"
     AUTO = "auto"
+    TUNED = "tuned"
 
 
 class Regime(str, enum.Enum):
@@ -133,12 +144,32 @@ def plan_vector_blocks(
     elif policy is MappingPolicy.FIXED:
         block = FIXED_BLOCK_1D * FIXED_LWS          # constant, hw-agnostic
     else:
-        # Eq. 1 at tier 1/2: each resident program loops gws / (hp) elements,
-        # where hp counts resident programs x lane parallelism.
+        # Eq. 1 at tier 1/2 (AUTO and the TUNED seed): each resident program
+        # loops gws / hp elements, where hp counts resident programs x lane
+        # parallelism.
         lws = resolve_lws(w.gws, hp_programs * q)
         block = round_up(lws, 1) * q                # lws lane-tiles per program
         block = min(block, vmem_cap)
+    return vector_plan_for_block(w, hw, block, policy, n_streams=n_streams)
 
+
+def vector_plan_for_block(
+    w: Workload,
+    hw: TpuParams,
+    block: int,
+    policy: MappingPolicy = MappingPolicy.TUNED,
+    n_streams: int = 3,
+) -> BlockPlan:
+    """Build the full ``BlockPlan`` from one decision variable (``block``).
+
+    Legalizes the candidate (lane-quantum rounding, gws clamp) and derives
+    grid / rounds / utilization — the single source of truth shared by the
+    policy planners above and the tuner's candidate evaluation, so a cached
+    tuning entry only needs to persist ``block_elems``.
+    """
+    q = _lane_quantum(hw)
+    hp_programs = hw.cores_per_chip
+    block = max(q, (block // q) * q)
     block = min(block, round_up(w.gws, q))
     padded = round_up(w.gws, block)
     grid = padded // block
@@ -215,18 +246,39 @@ def plan_matmul_blocks(
             elif bn > t:
                 bn //= 2
         bm, bn = max(t, bm), max(t, bn)
+    return matmul_plan_for_blocks(m, n, k, hw, bm, bn, bk, policy,
+                                  dtype_bytes=dtype_bytes)
 
-    bm = min(bm, round_up(m, 8))
-    bn = min(bn, round_up(n, t))
-    bk = min(bk, round_up(k, t))
+
+def matmul_plan_for_blocks(
+    m: int,
+    n: int,
+    k: int,
+    hw: TpuParams,
+    bm: int,
+    bn: int,
+    bk: int,
+    policy: MappingPolicy = MappingPolicy.TUNED,
+    dtype_bytes: int = 2,
+) -> MatmulPlan:
+    """Build the full ``MatmulPlan`` from the (bm, bn, bk) decision —
+    shared by ``plan_matmul_blocks`` and the tuner (cached entries persist
+    only the three block sizes)."""
+    t = hw.mxu_dim
+    mt, nt = ceil_div(m, t), ceil_div(n, t)
+    # shape clamps only (policy branches/tuner candidates own the lower
+    # bounds); the max(1, ...) floor just guards degenerate cached values
+    bm = min(max(1, bm), round_up(m, 8))
+    bn = min(max(1, bn), round_up(n, t))
+    bk = min(max(1, bk), round_up(k, t))
     grid = (ceil_div(m, bm), ceil_div(n, bn), ceil_div(k, bk))
     padded = grid[0] * bm * grid[1] * bn
     util = (m * n) / padded
-    progs = grid[0] * grid[1]
+    vmem = (bm * bk + bk * bn + bm * bn * 2) * dtype_bytes
     lws_tiles = (bm // min(bm, t)) * max(bn // t, 1)
     return MatmulPlan(
         policy=policy, bm=bm, bn=bn, bk=bk, grid=grid,
-        utilization=util, vmem_bytes=vmem(bm, bn, bk),
+        utilization=util, vmem_bytes=vmem,
         regime=classify_regime(lws_tiles, mt * nt, hw.cores_per_chip),
     )
 
@@ -268,11 +320,30 @@ def plan_attention_blocks(
             bk //= 2
         while vmem(bq, bk) > hw.vmem_budget_bytes and bq > 128:
             bq //= 2
-    bq = min(bq, round_up(seq_q, 8))
-    bk = min(bk, round_up(seq_k, 128))
+    return attention_plan_for_blocks(seq_q, seq_k, head_dim, hw, bq, bk,
+                                     policy, dtype_bytes=dtype_bytes)
+
+
+def attention_plan_for_blocks(
+    seq_q: int,
+    seq_k: int,
+    head_dim: int,
+    hw: TpuParams,
+    bq: int,
+    bk: int,
+    policy: MappingPolicy = MappingPolicy.TUNED,
+    dtype_bytes: int = 2,
+) -> AttentionPlan:
+    """Build the full ``AttentionPlan`` from the (block_q, block_k)
+    decision — shared by ``plan_attention_blocks`` and the tuner."""
+    del hw  # legalization is shape-driven; kept for signature symmetry
+    hd = max(head_dim, 128)
+    bq = min(max(8, bq // 8 * 8), round_up(seq_q, 8))
+    bk = min(max(128, bk // 128 * 128), round_up(seq_k, 128))
+    vmem = (bq * hd * 3 + 2 * bk * hd + bq * bk) * dtype_bytes * 2
     return AttentionPlan(
         policy=policy, block_q=bq, block_k=bk,
-        grid_q=ceil_div(seq_q, bq), vmem_bytes=vmem(bq, bk),
+        grid_q=ceil_div(seq_q, bq), vmem_bytes=vmem,
     )
 
 

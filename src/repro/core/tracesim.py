@@ -5,7 +5,7 @@ The paper derives its mapping rule from RTL execution traces (PC, thread
 mask, warp issue timestamps).  No Vortex RTL exists in this environment, so
 we model the *documented* behaviour of the traces analytically:
 
-  * the runtime spawns ``ceil(gws / lws)`` software warslots; the hardware
+  * the runtime spawns ``ceil(gws / lws)`` software work slots; the hardware
     holds ``hp = cores x warps x threads`` lanes; excess slots serialize into
     ``ceil(slots / hp)`` kernel **calls**, each paying a dispatch overhead
     (the inter-wavefront gaps of Fig. 1, "lws=1" row);
@@ -146,13 +146,17 @@ def simulate(
 
 def simulate_policy(w: Workload, cfg: VortexParams, policy: str,
                     trace: bool = False) -> SimResult:
-    """naive -> lws=1; fixed -> lws=32; auto -> Eq. 1."""
+    """naive -> lws=1; fixed -> lws=32; auto -> Eq. 1; tuned -> Eq. 1
+    refined by ``core.autotune`` on this very simulator."""
     if policy == "naive":
         lws = 1
     elif policy == "fixed":
         lws = 32
     elif policy == "auto":
         lws = resolve_lws(w.gws, cfg.hp)
+    elif policy == "tuned":
+        from repro.core.autotune import refine_lws  # lazy: avoids cycle
+        lws = refine_lws(w, cfg).best
     else:
         raise ValueError(f"unknown policy {policy!r}")
     return simulate(w, cfg, lws, trace=trace)

@@ -1,5 +1,6 @@
 """repro.kernels — Pallas TPU kernels (pl.pallas_call + BlockSpec) with
-runtime-resolved mappings, jit'd wrappers (ops) and pure-jnp oracles (ref)."""
+runtime-resolved mappings, jit'd wrappers (ops, routed through the
+repro.tuner dispatch layer) and pure-jnp oracles (ref)."""
 
 from repro.kernels import ops, ref
 

@@ -23,6 +23,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.hw import TpuParams, round_up
 from repro.core.mapper import AttentionPlan, MappingPolicy, plan_attention_blocks
+from repro.core.compat import tpu_compiler_params
 
 _NEG_INF = float("-inf")
 
@@ -112,7 +113,7 @@ def flash_attention_pallas(
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

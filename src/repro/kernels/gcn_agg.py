@@ -21,6 +21,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.hw import TpuParams, round_up
 from repro.core.mapper import MappingPolicy, resolve_lws
+from repro.core.compat import tpu_compiler_params
 
 
 def plan_node_block(n: int, f: int, hw: TpuParams, policy: MappingPolicy,
@@ -96,7 +97,7 @@ def gcn_aggregate_pallas(
         ],
         out_specs=pl.BlockSpec((block_n, f), lambda i, j: (i, 0)),
         scratch_shapes=[pltpu.VMEM((block_n, f), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

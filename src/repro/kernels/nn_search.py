@@ -20,6 +20,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.hw import TpuParams, round_up
 from repro.core.mapper import MappingPolicy, resolve_lws
+from repro.core.compat import tpu_compiler_params
 
 _BIG = 3.4e38  # plain float: jnp constants would be captured as tracers
 
@@ -98,7 +99,7 @@ def nn_search_pallas(
                    pl.BlockSpec((block_q,), lambda i, j: (i,))),
         scratch_shapes=[pltpu.VMEM((block_q,), jnp.float32),
                         pltpu.VMEM((block_q,), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,13 +1,18 @@
-"""Public jit'd kernel API with platform dispatch.
+"""Public jit'd kernel API with platform + tuner dispatch.
 
 Production pattern: each op resolves its mapping at trace time from the
-detected hardware (the paper's runtime technique), then dispatches to
+detected hardware (the paper's runtime technique) by routing through the
+``repro.tuner`` dispatch layer, then executes
 
   * the Pallas TPU kernel on ``tpu`` platforms,
   * the pure-jnp reference on other platforms (so CPU dry-runs lower
     compact HLO and CI runs everywhere),
   * the Pallas kernel in interpret mode when ``force="interpret"``
     (used by the kernel test suite on CPU).
+
+Under ``MappingPolicy.TUNED`` the dispatcher consults the persistent
+tuning cache and refines on a miss (see docs/TUNING.md); the other
+policies resolve through the pure ``core.mapper`` planners unchanged.
 
 ``set_default_policy`` / ``set_force_mode`` give process-wide control; the
 ``policy=`` kwarg overrides per call.
@@ -24,15 +29,7 @@ import jax.numpy as jnp
 from repro.core.hw import TpuParams, detect
 from repro.core.mapper import MappingPolicy
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention_pallas
-from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.gcn_agg import gcn_aggregate_pallas
-from repro.kernels.matmul import matmul_pallas
-from repro.kernels.nn_search import nn_search_pallas
-from repro.kernels.rmsnorm import rmsnorm_pallas
-from repro.kernels.saxpy import saxpy_pallas
-from repro.kernels.stencil import gaussian_blur_pallas
-from repro.kernels.vecadd import vecadd_pallas
+from repro.tuner import dispatch as tdispatch
 
 ForceMode = Literal["auto", "pallas", "interpret", "ref"]
 
@@ -77,7 +74,8 @@ def vecadd(x, y, *, policy=None, hw: Optional[TpuParams] = None):
     use, interp = _use_pallas()
     if not use:
         return ref.vecadd(x, y)
-    return vecadd_pallas(x, y, hw=hw or _hw(), policy=pol, interpret=interp)
+    return tdispatch.tuned_call("vecadd", x, y, hw=hw or _hw(), policy=pol,
+                                interpret=interp)
 
 
 def saxpy(a, x, y, *, policy=None, hw: Optional[TpuParams] = None):
@@ -85,7 +83,8 @@ def saxpy(a, x, y, *, policy=None, hw: Optional[TpuParams] = None):
     use, interp = _use_pallas()
     if not use:
         return ref.saxpy(a, x, y)
-    return saxpy_pallas(a, x, y, hw=hw or _hw(), policy=pol, interpret=interp)
+    return tdispatch.tuned_call("saxpy", a, x, y, hw=hw or _hw(), policy=pol,
+                                interpret=interp)
 
 
 def matmul(a, b, *, policy=None, out_dtype=None, hw: Optional[TpuParams] = None):
@@ -93,8 +92,8 @@ def matmul(a, b, *, policy=None, out_dtype=None, hw: Optional[TpuParams] = None)
     use, interp = _use_pallas()
     if not use:
         return ref.matmul(a, b, out_dtype=out_dtype)
-    return matmul_pallas(a, b, hw=hw or _hw(), policy=pol,
-                         out_dtype=out_dtype, interpret=interp)
+    return tdispatch.tuned_call("matmul", a, b, hw=hw or _hw(), policy=pol,
+                                out_dtype=out_dtype, interpret=interp)
 
 
 def rmsnorm(x, gamma, *, eps: float = 1e-6, policy=None,
@@ -106,8 +105,8 @@ def rmsnorm(x, gamma, *, eps: float = 1e-6, policy=None,
         return ref.rmsnorm(x, gamma, eps)
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
-    out = rmsnorm_pallas(x2, gamma, hw=hw or _hw(), eps=eps, policy=pol,
-                         interpret=interp)
+    out = tdispatch.tuned_call("rmsnorm", x2, gamma, hw=hw or _hw(),
+                               policy=pol, eps=eps, interpret=interp)
     return out.reshape(shape)
 
 
@@ -117,8 +116,9 @@ def gaussian_blur(img, *, ksize: int = 5, sigma: float = 1.0, policy=None,
     use, interp = _use_pallas()
     if not use:
         return ref.gaussian_blur(img, ksize, sigma)
-    return gaussian_blur_pallas(img, hw=hw or _hw(), ksize=ksize, sigma=sigma,
-                                policy=pol, interpret=interp)
+    return tdispatch.tuned_call("gaussian_blur", img, hw=hw or _hw(),
+                                policy=pol, ksize=ksize, sigma=sigma,
+                                interpret=interp)
 
 
 def nn_search(queries, refs, *, policy=None, hw: Optional[TpuParams] = None):
@@ -126,8 +126,8 @@ def nn_search(queries, refs, *, policy=None, hw: Optional[TpuParams] = None):
     use, interp = _use_pallas()
     if not use:
         return ref.nn_search(queries, refs)
-    return nn_search_pallas(queries, refs, hw=hw or _hw(), policy=pol,
-                            interpret=interp)
+    return tdispatch.tuned_call("nn_search", queries, refs, hw=hw or _hw(),
+                                policy=pol, interpret=interp)
 
 
 def gcn_aggregate(adj_norm, feats, *, policy=None,
@@ -136,21 +136,29 @@ def gcn_aggregate(adj_norm, feats, *, policy=None,
     use, interp = _use_pallas()
     if not use:
         return ref.gcn_aggregate(adj_norm, feats)
-    return gcn_aggregate_pallas(adj_norm, feats, hw=hw or _hw(), policy=pol,
-                                interpret=interp)
+    return tdispatch.tuned_call("gcn_agg", adj_norm, feats, hw=hw or _hw(),
+                                policy=pol, interpret=interp)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale=None, policy=None,
                     hw: Optional[TpuParams] = None):
-    """q (..., sq, d), k/v (..., skv, d): leading dims vmapped."""
+    """q (..., sq, d), k/v (..., skv, d): leading dims vmapped.
+
+    The plan is resolved ONCE through the dispatcher from the trailing
+    (seq, head_dim) shapes, then shared by every vmapped instance."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+
     pol = _resolve(policy)
     use, interp = _use_pallas()
     if not use:
         fn = functools.partial(ref.attention_chunked, causal=causal, scale=scale)
     else:
-        fn = functools.partial(flash_attention_pallas, hw=hw or _hw(),
-                               causal=causal, scale=scale, policy=pol,
-                               interpret=interp)
+        hw = hw or _hw()
+        spec = tdispatch.KERNEL_REGISTRY["flash_attention"]
+        desc = spec.describe(q, k, v, causal=causal)
+        plan, _ = tdispatch.resolve_plan("flash_attention", hw, pol, desc)
+        fn = functools.partial(flash_attention_pallas, hw=hw, causal=causal,
+                               scale=scale, plan=plan, interpret=interp)
     for _ in range(q.ndim - 2):
         fn = jax.vmap(fn)
     return fn(q, k, v)
@@ -158,14 +166,23 @@ def flash_attention(q, k, v, *, causal: bool = True, scale=None, policy=None,
 
 def decode_attention(q, k_cache, v_cache, cache_len=None, *, scale=None,
                      policy=None, hw: Optional[TpuParams] = None):
-    """q (..., d), caches (..., S, d), cache_len broadcastable to leading."""
+    """q (..., d), caches (..., S, d), cache_len broadcastable to leading.
+
+    Like ``flash_attention``: one dispatcher-resolved ``block_s`` for the
+    trailing (S, d) cache shape, shared across the vmapped batch/heads."""
+    from repro.kernels.decode_attention import decode_attention_pallas
+
     pol = _resolve(policy)
     use, interp = _use_pallas()
     if not use:
         fn = functools.partial(ref.decode_attention, scale=scale)
     else:
-        fn = functools.partial(decode_attention_pallas, hw=hw or _hw(),
-                               scale=scale, policy=pol, interpret=interp)
+        hw = hw or _hw()
+        spec = tdispatch.KERNEL_REGISTRY["decode_attention"]
+        desc = spec.describe(q, k_cache, v_cache)
+        block_s, _ = tdispatch.resolve_plan("decode_attention", hw, pol, desc)
+        fn = functools.partial(decode_attention_pallas, hw=hw, scale=scale,
+                               block_s=block_s, interpret=interp)
     lead = q.ndim - 1
     if cache_len is None:
         cache_len = jnp.full(q.shape[:lead], k_cache.shape[-2], jnp.int32)

@@ -1,9 +1,9 @@
 """vecadd — the paper's Fig. 1 kernel, mapped by the runtime block planner.
 
 The ``lws`` analogue is ``plan.block_elems``: the number of elements one
-program instance covers.  The three policies (naive / fixed / auto) produce
-different (block, grid) decompositions of the same gws, exactly mirroring
-Fig. 1's four traces.
+program instance covers.  The four policies (naive / fixed / auto / tuned)
+produce different (block, grid) decompositions of the same gws, mirroring
+Fig. 1's traces; ``tuned`` refines the auto seed through ``repro.tuner``.
 """
 
 from __future__ import annotations

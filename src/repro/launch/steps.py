@@ -2,7 +2,8 @@
 
 ``make_train_step`` composes the whole production recipe:
   * microbatch count from ``core.mapper.plan_microbatch`` (Eq. 1 at the
-    mesh tier, HBM-budget constrained),
+    mesh tier, HBM-budget constrained; under ``MappingPolicy.TUNED`` it
+    resolves through the ``repro.tuner`` dispatch layer's fallback path),
   * per-layer remat (scan-over-layers bodies),
   * grad accumulation in f32 with ONE reduction at the end
     (``reduce_once``) rather than per microbatch,
@@ -24,6 +25,7 @@ from repro.core.mapper import MappingPolicy, MeshPlan, plan_microbatch
 from repro.models.model import Model
 from repro.optim import AdamWConfig, adamw_update, compress_grads_int8, init_opt_state
 from repro.runtime.sharding import Plan, make_ctx
+from repro.core.compat import opt_barrier
 
 PyTree = Any
 
@@ -69,10 +71,19 @@ def activation_budget(cfg: ModelConfig, plan: Plan,
 def resolve_microbatches(cfg: ModelConfig, shape: ShapeConfig, plan: Plan,
                          policy: MappingPolicy = MappingPolicy.AUTO
                          ) -> MeshPlan:
-    return plan_microbatch(
-        shape.global_batch, plan.info.dp,
-        activation_bytes_per_seq(cfg, shape.seq_len, plan.info.tp),
-        activation_budget(cfg, plan), policy=policy)
+    """Mesh-tier Eq. 1, routed through the tuner dispatch layer.
+
+    The mesh tier has no refine cost model (the objective is HBM fit, not
+    a differentiable roofline), so ``TUNED`` falls back cleanly to the
+    Eq. 1 plan — memoized in the tuning cache with zero probes.  The
+    other policies resolve through ``plan_microbatch`` directly."""
+    gb, dp = shape.global_batch, plan.info.dp
+    abs_ = activation_bytes_per_seq(cfg, shape.seq_len, plan.info.tp)
+    budget = activation_budget(cfg, plan)
+    if MappingPolicy(policy) is MappingPolicy.TUNED:
+        from repro.tuner import resolve_mesh_plan
+        return resolve_mesh_plan(gb, dp, abs_, budget, policy=policy)
+    return plan_microbatch(gb, dp, abs_, budget, policy=policy)
 
 
 # --------------------------------------------------------------------------- #
@@ -137,7 +148,7 @@ def make_train_step(model: Model, opt_cfg: AdamWConfig, plan: Plan,
                 batch)
 
             def acc_body(carry, mb):
-                mb = jax.lax.optimization_barrier(mb)
+                mb = opt_barrier(mb)
                 g_acc, loss_acc = carry
                 (loss, _), g = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, mb)

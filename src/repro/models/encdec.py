@@ -18,6 +18,7 @@ from repro.models.attention import (attention_block, attention_decode,
 from repro.models.layers import (ParamSpec, ShardCtx, embed, embed_specs,
                                  mlp, mlp_specs, rmsnorm, rope_tables,
                                  stack_specs, unembed)
+from repro.core.compat import opt_barrier
 
 
 def _enc_block_specs(cfg: ModelConfig) -> dict:
@@ -78,7 +79,7 @@ def encode(params: dict, frames: jax.Array, cfg: ModelConfig, *,
     x = ctx.p(x, "batch", "seq_sp", "embed")
 
     def body(x, lp):
-        lp = jax.lax.optimization_barrier(lp)
+        lp = opt_barrier(lp)
         h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
         a, _ = attention_block(lp["attn"], h, cfg, causal=False, ctx=ctx)
         x = ctx.p(x + a, "batch", "seq_sp", "embed")
@@ -103,7 +104,7 @@ def encdec_forward(params: dict, tokens: jax.Array, frames: jax.Array,
     cos, sin = rope_tables(jnp.arange(s), cfg.head_dim, cfg.rope_theta)
 
     def body(x, lp):
-        lp = jax.lax.optimization_barrier(lp)
+        lp = opt_barrier(lp)
         h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
         a, kv = attention_block(lp["attn"], h, cfg, cos=cos, sin=sin,
                                 causal=True, ctx=ctx)
@@ -153,7 +154,7 @@ def encdec_decode(params: dict, cache: dict, tokens: jax.Array,
     cos, sin = rope_tables(pos[None], cfg.head_dim, cfg.rope_theta)
 
     def body(x, xs):
-        lp, kc, vc, ck, cv = jax.lax.optimization_barrier(xs)
+        lp, kc, vc, ck, cv = opt_barrier(xs)
         h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
         a, (kc, vc) = attention_decode(lp["attn"], h, cfg, kc, vc, pos,
                                        cos=cos, sin=sin, ctx=ctx)

@@ -22,6 +22,7 @@ from repro.models.layers import (ParamSpec, ShardCtx, embed, embed_specs,
                                  stack_specs, unembed)
 from repro.models.ssm import (ssm_block, ssm_block_specs, ssm_cache_shape,
                               ssm_decode_step)
+from repro.core.compat import opt_barrier
 
 
 def n_groups(cfg: ModelConfig) -> int:
@@ -76,7 +77,7 @@ def hybrid_forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
     gblocks = _group(params["blocks"], ng, k)
 
     def group_body(x, xs):
-        gp, gf = jax.lax.optimization_barrier(xs)
+        gp, gf = opt_barrier(xs)
         x, kv = _shared_attn(params["shared"], x, cfg, cos, sin, ctx)
 
         def layer_body(x, ls):
@@ -138,7 +139,7 @@ def hybrid_decode(params: dict, cache: dict, tokens: jax.Array,
     gconv = _group(cache["conv"], ng, k)
 
     def group_body(x, xs):
-        gp, gf, kc, vc, st, cv = jax.lax.optimization_barrier(xs)
+        gp, gf, kc, vc, st, cv = opt_barrier(xs)
         h = rmsnorm(x, params["shared"]["ln1"], cfg.norm_eps)
         a, (kc, vc) = attention_decode(params["shared"]["attn"], h, cfg,
                                        kc, vc, pos, cos=cos, sin=sin, ctx=ctx)

@@ -25,6 +25,7 @@ from repro.models.attention import (attention_block, attention_decode,
 from repro.models.layers import (NO_SHARD, ParamSpec, ShardCtx, embed,
                                  embed_specs, mlp, mlp_specs, rmsnorm,
                                  rope_tables, stack_specs, unembed)
+from repro.core.compat import opt_barrier
 
 LOCAL_ROPE_THETA = 10_000.0
 
@@ -124,7 +125,7 @@ def forward(
     def body(carry, xs):
         x, aux = carry
         # barrier: keep per-layer converts inside the loop (see optim.adamw)
-        layer_params, is_global = jax.lax.optimization_barrier(xs)
+        layer_params, is_global = opt_barrier(xs)
         x, kv, a = _block_fwd(layer_params, x, cfg, is_global=is_global,
                               cos_l=cos_l, sin_l=sin_l, cos_g=cos_g,
                               sin_g=sin_g, prefix_len=prefix_len,
@@ -201,7 +202,7 @@ def forward_banded(
     tailp = jax.tree.map(lambda a: a[n_full * gsz:], params["blocks"])
 
     def group_body(x, gp):
-        gp = jax.lax.optimization_barrier(gp)
+        gp = opt_barrier(gp)
         loc = jax.tree.map(lambda a: a[:ratio], gp)
         glob = jax.tree.map(lambda a: a[ratio], gp)
         x, kvs_l = jax.lax.scan(lambda xx, lp: local_block(lp, xx), x, loc)
@@ -214,7 +215,7 @@ def forward_banded(
     x, gcaches = jax.lax.scan(group_body, x, grouped)
 
     def tail_body(x, lp):
-        lp = jax.lax.optimization_barrier(lp)
+        lp = opt_barrier(lp)
         x, kv = local_block(lp, x)
         return x, (kv if return_cache else None)
 
@@ -281,7 +282,7 @@ def decode_step(
     flags = layer_flags(cfg)
 
     def body(x, xs):
-        layer_params, is_global, k_c, v_c = jax.lax.optimization_barrier(xs)
+        layer_params, is_global, k_c, v_c = opt_barrier(xs)
         cos = jnp.where(is_global, cos_g, cos_l) if cfg.local_global_ratio else cos_g
         sin = jnp.where(is_global, sin_g, sin_l) if cfg.local_global_ratio else sin_g
         h = rmsnorm(x, layer_params["ln1"], cfg.norm_eps)

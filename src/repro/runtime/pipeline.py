@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.compat import shard_map_compat
 from repro.core.hw import ceil_div
 
 PyTree = Any
@@ -112,11 +113,11 @@ def pipeline_apply(
             axis)
         return outs[None]
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         ranked, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(axis), stage_params), P()),
         out_specs=P(axis),
-        check_vma=False,
+        check=False,
     )
     out = fn(stage_params, x)      # (S, n_micro, mb, s, d), S identical copies
     return out[0]

@@ -271,10 +271,9 @@ def choose_serve_mesh(cfg: ModelConfig, n_chips: int = 256,
 
 
 def make_serve_mesh(cfg: ModelConfig, n_chips: int = 256):
-    import jax
+    from repro.launch.mesh import make_mesh_compat
     dp, tp = choose_serve_mesh(cfg, n_chips)
-    return jax.make_mesh((dp, tp), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((dp, tp), ("data", "model"))
 
 
 def param_pspec(spec: ParamSpec, plan: Plan) -> P:

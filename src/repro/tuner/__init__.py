@@ -1,0 +1,42 @@
+"""repro.tuner — persistent runtime tuning on top of the Eq. 1 mapper.
+
+The paper resolves kernel mappings at runtime from hardware parameters;
+its §3 observation is that the closed-form answer is near- but not always
+exactly optimal.  This subsystem closes the loop AND amortizes it:
+
+  ``signature``  canonical workload signatures + hardware keys,
+  ``cache``      LRU + JSON-on-disk store of refined plans (versioned,
+                 concurrent-writer safe),
+  ``dispatch``   the single entry point every Pallas kernel routes
+                 through: Eq. 1 seed -> cache -> refine -> memoize,
+                 activated by ``MappingPolicy.TUNED``.
+
+See docs/TUNING.md for the file format and how to register a kernel.
+"""
+
+from repro.tuner.cache import CacheStats, TuningCache, default_cache_path
+from repro.tuner.dispatch import (KERNEL_REGISTRY, KernelSpec, ResolveInfo,
+                                  get_default_cache, register_kernel,
+                                  resolve_mesh_plan, resolve_plan,
+                                  set_default_cache, tuned_call)
+from repro.tuner.signature import (SCHEMA_VERSION, WorkloadSignature,
+                                   hardware_key, workload_signature)
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "WorkloadSignature",
+    "workload_signature",
+    "hardware_key",
+    "CacheStats",
+    "TuningCache",
+    "default_cache_path",
+    "KernelSpec",
+    "KERNEL_REGISTRY",
+    "ResolveInfo",
+    "register_kernel",
+    "resolve_plan",
+    "resolve_mesh_plan",
+    "tuned_call",
+    "get_default_cache",
+    "set_default_cache",
+]

@@ -1,0 +1,217 @@
+"""Persistent, hardware-keyed store of refined kernel mappings.
+
+Two layers, one namespace:
+
+  * an in-memory LRU (``capacity`` entries, get-refreshes order) that
+    serves warm dispatches with a dict lookup — the hot path the
+    ``benchmarks/tuner_bench.py`` acceptance number measures;
+  * an optional JSON file so refinement survives the process — the
+    paper's runtime analysis amortized across runs.
+
+File format (see docs/TUNING.md)::
+
+    {"version": <SCHEMA_VERSION>, "entries": {"<hw_key>::<sig_key>": {
+        "plan": {...},             # tuned decision variables only
+        "cost": 1.2e-5,            # model cost of the winner (or null)
+        "seed_cost": 1.9e-5,       # model cost of the Eq. 1 seed
+        "probes": 7,               # refine probes spent finding it
+        "refine_time_s": 0.003,
+        "created": 1700000000.0
+    }, ...}}
+
+A version mismatch discards the whole file (schema changes invalidate
+every entry; there is no migration).  Concurrent writers are safe: saves
+take an ``fcntl`` lock on a sidecar ``.lock`` file, merge the on-disk
+entries with the in-memory ones (newest ``created`` wins), and publish
+via atomic ``os.replace`` — a torn read can never be observed and two
+processes refining disjoint workloads both keep their results.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from collections import OrderedDict
+from typing import Any, Optional, Union
+
+from repro.tuner.signature import SCHEMA_VERSION, WorkloadSignature
+
+__all__ = ["CacheStats", "TuningCache", "default_cache_path"]
+
+
+def default_cache_path() -> str:
+    """``$REPRO_TUNER_CACHE`` or ``~/.cache/repro/tuning_cache.json``."""
+    env = os.environ.get("REPRO_TUNER_CACHE")
+    if env:
+        return env
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(base, "repro", "tuning_cache.json")
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Counters surfaced by ``TuningCache.stats`` (and tuner_bench)."""
+
+    hits: int = 0
+    misses: int = 0
+    puts: int = 0
+    evictions: int = 0
+    refine_probes: int = 0
+    refine_time_s: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def as_dict(self) -> dict[str, Any]:
+        return dict(dataclasses.asdict(self), hit_rate=self.hit_rate)
+
+
+def _sig_key(sig: Union[WorkloadSignature, str]) -> str:
+    return sig.key if isinstance(sig, WorkloadSignature) else str(sig)
+
+
+@contextlib.contextmanager
+def _file_lock(path: str):
+    """Advisory lock around load-merge-replace; no-op where fcntl is
+    unavailable (atomic replace still prevents torn reads)."""
+    try:
+        import fcntl
+    except ImportError:          # non-POSIX: rely on os.replace atomicity
+        yield
+        return
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "a") as f:
+        fcntl.flock(f, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(f, fcntl.LOCK_UN)
+
+
+class TuningCache:
+    """In-memory LRU + JSON-on-disk store of refined plans.
+
+    ``path=None`` keeps the cache memory-only (tests, throwaway runs).
+    ``autosave`` persists after every ``put`` — refinement is orders of
+    magnitude more expensive than a save, so the write is noise.
+    """
+
+    def __init__(self, path: Optional[str] = None, *, capacity: int = 4096,
+                 autosave: bool = True):
+        self.path = path
+        self.capacity = max(1, capacity)
+        self.autosave = autosave and path is not None
+        self.stats = CacheStats()
+        self._mem: OrderedDict[str, dict] = OrderedDict()
+        if path is not None and os.path.exists(path):
+            self._merge(self._read_disk())
+
+    # -- keys --------------------------------------------------------------
+
+    @staticmethod
+    def full_key(hw_key: str, sig: Union[WorkloadSignature, str]) -> str:
+        return f"{hw_key}::{_sig_key(sig)}"
+
+    # -- core --------------------------------------------------------------
+
+    def get(self, hw_key: str,
+            sig: Union[WorkloadSignature, str]) -> Optional[dict]:
+        """Return the cached entry dict (not just the plan) or None."""
+        return self.get_by_key(self.full_key(hw_key, sig))
+
+    def get_by_key(self, full_key: str) -> Optional[dict]:
+        """``get`` with a caller-prebuilt key — the warm dispatch path
+        (dispatch memoizes the key string so repeat lookups hash a cached
+        string instead of rebuilding it)."""
+        entry = self._mem.get(full_key)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        self._mem.move_to_end(full_key)
+        self.stats.hits += 1
+        return entry
+
+    def put(self, hw_key: str, sig: Union[WorkloadSignature, str],
+            plan: dict, *, cost: Optional[float] = None,
+            seed_cost: Optional[float] = None, probes: int = 0,
+            refine_time_s: float = 0.0) -> dict:
+        k = self.full_key(hw_key, sig)
+        entry = {
+            "plan": dict(plan),
+            "cost": cost,
+            "seed_cost": seed_cost,
+            "probes": int(probes),
+            "refine_time_s": float(refine_time_s),
+            "created": time.time(),
+        }
+        self._mem[k] = entry
+        self._mem.move_to_end(k)
+        self.stats.puts += 1
+        self.stats.refine_probes += int(probes)
+        self.stats.refine_time_s += float(refine_time_s)
+        while len(self._mem) > self.capacity:
+            self._mem.popitem(last=False)
+            self.stats.evictions += 1
+        if self.autosave:
+            self.save()
+        return entry
+
+    def clear(self) -> None:
+        self._mem.clear()
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._mem
+
+    # -- persistence -------------------------------------------------------
+
+    def _read_disk(self) -> dict[str, dict]:
+        """Entries from ``self.path``; {} on missing/corrupt/version skew."""
+        assert self.path is not None
+        try:
+            with open(self.path) as f:
+                blob = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return {}
+        if not isinstance(blob, dict) or blob.get("version") != SCHEMA_VERSION:
+            return {}
+        entries = blob.get("entries", {})
+        return entries if isinstance(entries, dict) else {}
+
+    def _merge(self, disk: dict[str, dict]) -> None:
+        """Fold disk entries in; on collision the newest ``created`` wins."""
+        for k, v in disk.items():
+            mine = self._mem.get(k)
+            if mine is None or v.get("created", 0) > mine.get("created", 0):
+                self._mem[k] = v
+        while len(self._mem) > self.capacity:
+            self._mem.popitem(last=False)
+            self.stats.evictions += 1
+
+    def save(self) -> None:
+        """Merge-with-disk then atomically replace the cache file."""
+        if self.path is None:
+            return
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        with _file_lock(self.path + ".lock"):
+            self._merge(self._read_disk())
+            blob = {"version": SCHEMA_VERSION, "entries": dict(self._mem)}
+            fd, tmp = tempfile.mkstemp(prefix=".tuning_cache.", dir=d)
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(blob, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                with contextlib.suppress(OSError):
+                    os.unlink(tmp)
+                raise

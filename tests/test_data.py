@@ -1,10 +1,12 @@
 """Data pipeline: determinism, shard partition, restart safety, learnable
 structure — with hypothesis property tests on the partition invariants."""
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.configs import get_config
 from repro.data import DataConfig, data_config_for, iterator, make_batch

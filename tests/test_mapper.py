@@ -1,7 +1,8 @@
 """Eq. 1 + block/mesh planner: unit + hypothesis property tests."""
 
-import hypothesis.strategies as st
 import pytest
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.hw import TPU_REGISTRY, VortexParams, ceil_div

@@ -25,7 +25,7 @@ def run_sub(code: str):
         [sys.executable, "-c", env_code + textwrap.dedent(code)],
         capture_output=True, text=True, timeout=540,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
     )
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
     return r.stdout

@@ -1,6 +1,8 @@
 """Optimizer: AdamW math, scanned==flat update, clipping, schedules,
 int8 gradient compression bounds."""
 
+import pytest
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

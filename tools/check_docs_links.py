@@ -1,0 +1,50 @@
+#!/usr/bin/env python3
+"""Docs link check: every relative markdown link in README.md and docs/
+must point at an existing file or directory (CI runs this; see
+.github/workflows/ci.yml).
+
+    python tools/check_docs_links.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
+    errors = []
+    for m in LINK_RE.finditer(md.read_text()):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        target = target.split("#", 1)[0]        # strip intra-doc anchors
+        if not target:
+            continue
+        resolved = (md.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(root)}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("*.md"))
+    errors = []
+    for md in files:
+        if md.exists():
+            errors += check_file(md, root)
+    if errors:
+        print("\n".join(errors))
+        return 1
+    print(f"docs link check OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
