@@ -1,0 +1,122 @@
+"""Profiler benchmark: measured-cost refinement from the committed trace
+fixture — the acceptance numbers of the observation loop.
+
+Three sections, all device-free (CI runs this from the fixture alone):
+
+  1. **hybrid vs roofline** — for every workload in the fixture, resolve
+     with the roofline alone and with the hybrid top-K mode; the hybrid
+     choice's *measured* cost must be <= the roofline-only choice's
+     (the roofline winner is always in the top-K, so measurement can
+     only confirm or improve it).
+  2. **calibration** — fit roofline constants to the fixture and assert
+     the model-vs-measured error shrinks.
+  3. **zero-measurement warm hits** — a warm ``tuned_call`` under
+     ``measure="live"`` must perform zero measurements and zero store
+     lookups: the hit path is a dict lookup in every measure mode.
+
+    PYTHONPATH=src python -m benchmarks.profiler_bench
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.core.hw import TPU_REGISTRY
+from repro.core.roofline import fmt_seconds
+from repro.profiler import TraceStore, fit_roofline, hybrid_refine
+from repro.tuner import TuningCache, tuned_call
+
+HW = TPU_REGISTRY["cpu_sim"]
+
+#: the committed fixture: recorded interpret-mode sweeps on cpu_sim
+#: (regenerate with tools/profile.py sweep — see docs/TUNING.md).
+FIXTURE = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "tests", "fixtures", "profiler_traces.jsonl")
+
+
+def fixture_store() -> TraceStore:
+    store = TraceStore(FIXTURE, autosave=False)
+    assert len(store) > 0, f"fixture missing or empty: {FIXTURE}"
+    return store
+
+
+def fixture_workloads(store: TraceStore) -> list[tuple[str, dict]]:
+    """One (kernel, desc) per distinct workload signature in the store."""
+    seen: dict[str, tuple[str, dict]] = {}
+    for m in store.records():
+        if m.desc is not None and m.sig_key not in seen:
+            seen[m.sig_key] = (m.kernel, m.desc)
+    return sorted(seen.values(), key=str)
+
+
+def run(print_fn=print) -> dict:
+    store = fixture_store()
+    workloads = fixture_workloads(store)
+    kernels = sorted({k for k, _ in workloads})
+    assert len(kernels) >= 3, f"fixture must cover >=3 kernels, has {kernels}"
+
+    # -- 1: hybrid top-K vs roofline-only, judged on the fixture ----------
+    print_fn("name,us_per_call,derived")
+    rows = []
+    improved = 0
+    for kernel, desc in workloads:
+        res = hybrid_refine(kernel, desc, HW, store=store, mode="cached")
+        assert res.live_measurements == 0, "cached mode must never measure"
+        assert res.source == "measured", \
+            f"{kernel}: fixture should cover the top-K ({res.top_k})"
+        sig_key, hw_key = next(
+            (m.sig_key, m.hw_key) for m in store.records()
+            if m.kernel == kernel and m.desc == desc)
+        m_hybrid = store.get(hw_key, sig_key, res.value)
+        m_roof = store.get(hw_key, sig_key, res.roofline.best)
+        assert m_hybrid is not None, f"{kernel}: hybrid pick unmeasured"
+        assert m_roof is not None, f"{kernel}: roofline pick unmeasured"
+        assert m_hybrid.median_s <= m_roof.median_s, \
+            f"{kernel}: hybrid {m_hybrid.median_s} > roofline {m_roof.median_s}"
+        gain = m_roof.median_s / max(m_hybrid.median_s, 1e-12)
+        if res.value != res.roofline.best:
+            improved += 1
+        print_fn(f"prof_hybrid_{kernel},{m_hybrid.median_s * 1e6:.1f},"
+                 f"roofline={res.roofline.best};hybrid={res.value};"
+                 f"roofline_measured={fmt_seconds(m_roof.median_s)};"
+                 f"gain={gain:.3f}x")
+        rows.append({"kernel": kernel, "hybrid": res.value,
+                     "roofline": res.roofline.best, "gain": gain})
+
+    # -- 2: calibration shrinks model error -------------------------------
+    fit = fit_roofline(store.records(), HW)
+    assert fit.err_after <= fit.err_before, \
+        f"calibration regressed: {fit.err_before} -> {fit.err_after}"
+    print_fn(f"prof_calibration,0.0,records={fit.n_records};"
+             f"err_before={fit.err_before:.3f};err_after={fit.err_after:.3f};"
+             f"improvement={fit.improvement:.1f}x")
+
+    # -- 3: warm hits measure nothing -------------------------------------
+    cache = TuningCache(path=None)
+    live = TraceStore(path=None)
+    x = jnp.arange(4096, dtype=jnp.float32)
+    opts = dict(interpret=True, warmup=0, reps=1)
+    tuned_call("vecadd", x, x, hw=HW, cache=cache, interpret=True,
+               measure="live", store=live, measure_opts=opts)
+    cold = (live.stats.recorded, live.stats.lookups)
+    assert cold[0] > 0, "cold live miss should have measured"
+    tuned_call("vecadd", x, x, hw=HW, cache=cache, interpret=True,
+               measure="live", store=live, measure_opts=opts)
+    warm = (live.stats.recorded - cold[0], live.stats.lookups - cold[1])
+    assert warm == (0, 0), f"warm hit measured/looked up: {warm}"
+    assert cache.stats.hits == 1
+    print_fn(f"prof_warm_dispatch,0.0,cold_measurements={cold[0]};"
+             f"warm_measurements=0;pass=True")
+
+    return {"workloads": rows, "improved": improved,
+            "err_before": fit.err_before, "err_after": fit.err_after,
+            "cold_measurements": cold[0]}
+
+
+if __name__ == "__main__":
+    out = run()
+    print(f"\n{len(out['workloads'])} workloads; hybrid moved off the "
+          f"roofline choice on {out['improved']}; calibration error "
+          f"{out['err_before']:.3f} -> {out['err_after']:.3f} -> PASS")

@@ -1,12 +1,14 @@
 """Benchmark harness entry point — one section per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run                # full suite
+  PYTHONPATH=src python -m benchmarks.run tuner prof     # just these
 
 Sections:
   fig1   execution-trace regimes (paper Fig. 1)
   fig2   450-config mapping-policy sweep (paper Fig. 2 + headline claims)
   kern   Pallas kernel suite under the 4 policies (``name,us_per_call,derived``)
   tuner  tuning-cache dispatch: warm overhead vs cold refine + policy sweep
+  prof   profiler: hybrid measured tuning + calibration from the trace fixture
   roof   roofline table from the dry-run records (single + multi mesh)
 """
 
@@ -15,22 +17,26 @@ from __future__ import annotations
 import sys
 
 
-def main() -> None:
-    from benchmarks import (fig1_trace, fig2_sweep, kernel_bench,
-                            roofline_table, tuner_bench)
+def _banner(text: str) -> None:
+    print("=" * 74)
+    print(f"== {text}")
+    print("=" * 74)
 
-    print("=" * 74)
-    print("== fig1_trace: Vortex execution regimes (paper Fig. 1)")
-    print("=" * 74)
+
+def _run_fig1() -> None:
+    from benchmarks import fig1_trace
+
+    _banner("fig1_trace: Vortex execution regimes (paper Fig. 1)")
     fig1 = fig1_trace.run()
     print("\nname,us_per_call,derived")
     for lws, cycles, calls, regime in fig1:
         print(f"fig1_vecadd_lws{lws},0.0,cycles={cycles};calls={calls};{regime}")
 
-    print()
-    print("=" * 74)
-    print("== fig2_sweep: 450-configuration mapping comparison (paper Fig. 2)")
-    print("=" * 74)
+
+def _run_fig2() -> None:
+    from benchmarks import fig2_sweep
+
+    _banner("fig2_sweep: 450-configuration mapping comparison (paper Fig. 2)")
     fig2 = fig2_sweep.run()
     print("\nname,us_per_call,derived")
     for name, s in fig2.items():
@@ -43,26 +49,61 @@ def main() -> None:
           f"fixed_avg={s['fixed_avg']:.2f}(paper3.7);"
           f"tail={s['tail_max']:.1f}(paper~20)")
 
-    print()
-    print("=" * 74)
-    print("== kernel_bench: Pallas kernels x mapping policies (interpret)")
-    print("=" * 74)
+
+def _run_kern() -> None:
+    from benchmarks import kernel_bench
+
+    _banner("kernel_bench: Pallas kernels x mapping policies (interpret)")
     print("name,us_per_call,derived")
     kernel_bench.run()
 
-    print()
-    print("=" * 74)
-    print("== tuner_bench: cache dispatch overhead + NAIVE/FIXED/AUTO/TUNED")
-    print("=" * 74)
+
+def _run_tuner() -> None:
+    from benchmarks import tuner_bench
+
+    _banner("tuner_bench: cache dispatch overhead + NAIVE/FIXED/AUTO/TUNED")
     tuner_bench.run()
 
-    print()
-    print("=" * 74)
-    print("== roofline: dry-run derived terms (see EXPERIMENTS.md)")
-    print("=" * 74)
+
+def _run_prof() -> None:
+    from benchmarks import profiler_bench
+
+    _banner("profiler_bench: measured-cost tuning + calibration (fixture)")
+    profiler_bench.run()
+
+
+def _run_roof() -> None:
+    from benchmarks import roofline_table
+
+    _banner("roofline: dry-run derived terms (see EXPERIMENTS.md)")
     for mesh in ("single", "multi"):
         roofline_table.run(mesh=mesh)
         print()
+
+
+SECTIONS = {
+    "fig1": _run_fig1,
+    "fig2": _run_fig2,
+    "kern": _run_kern,
+    "tuner": _run_tuner,
+    "prof": _run_prof,
+    "roof": _run_roof,
+}
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    names = argv or list(SECTIONS)
+    unknown = [n for n in names if n not in SECTIONS]
+    if unknown:
+        print(f"unknown sections {unknown}; available: {list(SECTIONS)}",
+              file=sys.stderr)
+        return 2
+    for i, name in enumerate(names):
+        if i:
+            print()
+        SECTIONS[name]()
+    return 0
 
 
 if __name__ == "__main__":

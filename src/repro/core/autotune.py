@@ -35,10 +35,20 @@ class RefineResult:
     seed_cost: float
     best_cost: float
     probes: int
+    #: every (candidate, cost) pair probed, seed included — lets callers
+    #: rank the whole neighbourhood (profiler.cost prunes to the roofline
+    #: top-K before spending measurements) without re-probing.
+    evaluations: Optional[tuple] = None
 
     @property
     def improvement(self) -> float:
         return self.seed_cost / self.best_cost if self.best_cost else 1.0
+
+    def ranked(self) -> list:
+        """Evaluations sorted by ascending cost (finite first)."""
+        if not self.evaluations:
+            return []
+        return sorted(self.evaluations, key=lambda vc: vc[1])
 
 
 def refine_discrete(
@@ -61,15 +71,20 @@ def refine_discrete(
         candidates = sorted(cands)
     seed_cost = cost_fn(seed)
     best, best_cost, probes = seed, seed_cost, 1
+    evals = [(seed, seed_cost)]
     for c in candidates:
-        if c == seed or probes >= max_probes:
+        if probes >= max_probes:      # budget spent: no later probe possible
+            break
+        if c == seed:
             continue
         probes += 1
         cost = cost_fn(c)
+        evals.append((c, cost))
         if cost < best_cost:
             best, best_cost = c, cost
     return RefineResult(seed=seed, best=best, seed_cost=seed_cost,
-                        best_cost=best_cost, probes=probes)
+                        best_cost=best_cost, probes=probes,
+                        evaluations=tuple(evals))
 
 
 def refine_lws(w: Workload, cfg: VortexParams, max_probes: int = 16) -> RefineResult:

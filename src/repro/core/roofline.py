@@ -35,6 +35,7 @@ __all__ = [
     "collective_stats_from_hlo",
     "RooflineReport",
     "roofline_from_compiled",
+    "kernel_roofline_seconds",
     "model_flops_per_step",
 ]
 
@@ -274,6 +275,21 @@ def roofline_from_numbers(
         collectives=dict(coll_bytes),
         peak_memory_bytes=peak_memory,
     )
+
+
+def kernel_roofline_seconds(flops: float, byts: float, programs: float,
+                            hw: Any) -> float:
+    """Per-kernel roofline: ``max(compute, memory) + launch overhead``.
+
+    ``hw`` is a ``core.hw.TpuParams`` (duck-typed to avoid a hard import:
+    only ``peak_flops_bf16``, ``hbm_bw``, ``launch_overhead_cycles`` and
+    ``clock_hz`` are read).  This is THE model the tuner's per-kernel cost
+    functions are built from (``tuner.dispatch``) and the model whose
+    parameters ``profiler.calibrate`` fits against measured traces — one
+    definition, so a calibrated ``TpuParams`` changes both.
+    """
+    t = max(flops / hw.peak_flops_bf16, byts / hw.hbm_bw)
+    return t + programs * hw.launch_overhead_cycles / hw.clock_hz
 
 
 def model_flops_per_step(

@@ -14,14 +14,19 @@ Under ``MappingPolicy.TUNED`` the dispatcher consults the persistent
 tuning cache and refines on a miss (see docs/TUNING.md); the other
 policies resolve through the pure ``core.mapper`` planners unchanged.
 
-``set_default_policy`` / ``set_force_mode`` give process-wide control; the
-``policy=`` kwarg overrides per call.
+``set_default_policy`` / ``set_force_mode`` / ``set_default_measure``
+give process-wide control; the ``policy=`` kwarg overrides per call.
+Prefer the scoped context managers — ``with ops.policy("tuned"): ...``,
+``with ops.force("interpret"): ...``, ``with ops.measuring("cached"): ...``
+— which restore the previous state on exit, so tests and benchmarks
+never leak process-wide configuration.
 """
 
 from __future__ import annotations
 
+import contextlib
 import functools
-from typing import Literal, Optional
+from typing import Iterator, Literal, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,11 +35,14 @@ from repro.core.hw import TpuParams, detect
 from repro.core.mapper import MappingPolicy
 from repro.kernels import ref
 from repro.tuner import dispatch as tdispatch
+from repro.tuner.dispatch import MEASURE_MODES
 
 ForceMode = Literal["auto", "pallas", "interpret", "ref"]
+MeasureMode = Literal["off", "cached", "live"]
 
 _DEFAULT_POLICY: MappingPolicy = MappingPolicy.AUTO
 _FORCE: ForceMode = "auto"
+_DEFAULT_MEASURE: MeasureMode = "off"
 
 
 def set_default_policy(policy: MappingPolicy | str) -> None:
@@ -45,6 +53,57 @@ def set_default_policy(policy: MappingPolicy | str) -> None:
 def set_force_mode(mode: ForceMode) -> None:
     global _FORCE
     _FORCE = mode
+
+
+def set_default_measure(mode: MeasureMode) -> None:
+    """Process-wide ``measure=`` mode for TUNED cache misses (see
+    docs/TUNING.md): "off" analytic, "cached" trace-store replay,
+    "live" measure-and-record.  Warm hits never measure in any mode."""
+    global _DEFAULT_MEASURE
+    if mode not in MEASURE_MODES:
+        raise ValueError(f"measure must be one of {MEASURE_MODES}, "
+                         f"got {mode!r}")
+    _DEFAULT_MEASURE = mode
+
+
+def get_default_measure() -> MeasureMode:
+    return _DEFAULT_MEASURE
+
+
+@contextlib.contextmanager
+def policy(policy: MappingPolicy | str) -> Iterator[None]:
+    """Scoped ``set_default_policy``: ``with ops.policy("tuned"): ...``"""
+    global _DEFAULT_POLICY
+    prev = _DEFAULT_POLICY
+    set_default_policy(policy)
+    try:
+        yield
+    finally:
+        _DEFAULT_POLICY = prev
+
+
+@contextlib.contextmanager
+def force(mode: ForceMode) -> Iterator[None]:
+    """Scoped ``set_force_mode``: ``with ops.force("interpret"): ...``"""
+    global _FORCE
+    prev = _FORCE
+    set_force_mode(mode)
+    try:
+        yield
+    finally:
+        _FORCE = prev
+
+
+@contextlib.contextmanager
+def measuring(mode: MeasureMode) -> Iterator[None]:
+    """Scoped ``set_default_measure``: ``with ops.measuring("cached"): ...``"""
+    global _DEFAULT_MEASURE
+    prev = _DEFAULT_MEASURE
+    set_default_measure(mode)
+    try:
+        yield
+    finally:
+        _DEFAULT_MEASURE = prev
 
 
 def _resolve(policy) -> MappingPolicy:
@@ -75,7 +134,7 @@ def vecadd(x, y, *, policy=None, hw: Optional[TpuParams] = None):
     if not use:
         return ref.vecadd(x, y)
     return tdispatch.tuned_call("vecadd", x, y, hw=hw or _hw(), policy=pol,
-                                interpret=interp)
+                                measure=_DEFAULT_MEASURE, interpret=interp)
 
 
 def saxpy(a, x, y, *, policy=None, hw: Optional[TpuParams] = None):
@@ -84,7 +143,7 @@ def saxpy(a, x, y, *, policy=None, hw: Optional[TpuParams] = None):
     if not use:
         return ref.saxpy(a, x, y)
     return tdispatch.tuned_call("saxpy", a, x, y, hw=hw or _hw(), policy=pol,
-                                interpret=interp)
+                                measure=_DEFAULT_MEASURE, interpret=interp)
 
 
 def matmul(a, b, *, policy=None, out_dtype=None, hw: Optional[TpuParams] = None):
@@ -93,7 +152,8 @@ def matmul(a, b, *, policy=None, out_dtype=None, hw: Optional[TpuParams] = None)
     if not use:
         return ref.matmul(a, b, out_dtype=out_dtype)
     return tdispatch.tuned_call("matmul", a, b, hw=hw or _hw(), policy=pol,
-                                out_dtype=out_dtype, interpret=interp)
+                                measure=_DEFAULT_MEASURE, out_dtype=out_dtype,
+                                interpret=interp)
 
 
 def rmsnorm(x, gamma, *, eps: float = 1e-6, policy=None,
@@ -106,7 +166,8 @@ def rmsnorm(x, gamma, *, eps: float = 1e-6, policy=None,
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     out = tdispatch.tuned_call("rmsnorm", x2, gamma, hw=hw or _hw(),
-                               policy=pol, eps=eps, interpret=interp)
+                               policy=pol, measure=_DEFAULT_MEASURE, eps=eps,
+                               interpret=interp)
     return out.reshape(shape)
 
 
@@ -117,8 +178,8 @@ def gaussian_blur(img, *, ksize: int = 5, sigma: float = 1.0, policy=None,
     if not use:
         return ref.gaussian_blur(img, ksize, sigma)
     return tdispatch.tuned_call("gaussian_blur", img, hw=hw or _hw(),
-                                policy=pol, ksize=ksize, sigma=sigma,
-                                interpret=interp)
+                                policy=pol, measure=_DEFAULT_MEASURE,
+                                ksize=ksize, sigma=sigma, interpret=interp)
 
 
 def nn_search(queries, refs, *, policy=None, hw: Optional[TpuParams] = None):
@@ -127,7 +188,8 @@ def nn_search(queries, refs, *, policy=None, hw: Optional[TpuParams] = None):
     if not use:
         return ref.nn_search(queries, refs)
     return tdispatch.tuned_call("nn_search", queries, refs, hw=hw or _hw(),
-                                policy=pol, interpret=interp)
+                                policy=pol, measure=_DEFAULT_MEASURE,
+                                interpret=interp)
 
 
 def gcn_aggregate(adj_norm, feats, *, policy=None,
@@ -137,7 +199,8 @@ def gcn_aggregate(adj_norm, feats, *, policy=None,
     if not use:
         return ref.gcn_aggregate(adj_norm, feats)
     return tdispatch.tuned_call("gcn_agg", adj_norm, feats, hw=hw or _hw(),
-                                policy=pol, interpret=interp)
+                                policy=pol, measure=_DEFAULT_MEASURE,
+                                interpret=interp)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale=None, policy=None,
@@ -156,7 +219,9 @@ def flash_attention(q, k, v, *, causal: bool = True, scale=None, policy=None,
         hw = hw or _hw()
         spec = tdispatch.KERNEL_REGISTRY["flash_attention"]
         desc = spec.describe(q, k, v, causal=causal)
-        plan, _ = tdispatch.resolve_plan("flash_attention", hw, pol, desc)
+        plan, _ = tdispatch.resolve_plan("flash_attention", hw, pol, desc,
+                                         measure=_DEFAULT_MEASURE,
+                                         measure_opts={"interpret": interp})
         fn = functools.partial(flash_attention_pallas, hw=hw, causal=causal,
                                scale=scale, plan=plan, interpret=interp)
     for _ in range(q.ndim - 2):
@@ -180,7 +245,9 @@ def decode_attention(q, k_cache, v_cache, cache_len=None, *, scale=None,
         hw = hw or _hw()
         spec = tdispatch.KERNEL_REGISTRY["decode_attention"]
         desc = spec.describe(q, k_cache, v_cache)
-        block_s, _ = tdispatch.resolve_plan("decode_attention", hw, pol, desc)
+        block_s, _ = tdispatch.resolve_plan("decode_attention", hw, pol, desc,
+                                            measure=_DEFAULT_MEASURE,
+                                            measure_opts={"interpret": interp})
         fn = functools.partial(decode_attention_pallas, hw=hw, scale=scale,
                                block_s=block_s, interpret=interp)
     lead = q.ndim - 1

@@ -1,0 +1,54 @@
+"""repro.profiler — on-device observation closing the tuner's loop.
+
+The paper's mapping rule came from *measured* execution traces; the
+tuner (``repro.tuner``) refines against analytic cost models.  This
+subsystem supplies the missing evidence loop — Layer 5 of the
+architecture (see docs/ARCHITECTURE.md):
+
+  ``measure``    timed execution of kernel plans (warmup, repeats,
+                 ``block_until_ready``, median/IQR, per-program and
+                 per-byte normalization, XLA ``cost_analysis`` capture),
+  ``store``      versioned, hardware-keyed JSONL trace store (append,
+                 dedupe, atomic merge — fixtures make CI device-free),
+  ``cost``       ``MeasuredCost`` + ``hybrid_refine``: roofline prunes
+                 the candidate set, measurement picks the winner,
+  ``calibrate``  fit roofline / tracesim constants from stored traces,
+                 reporting model-vs-measured error before and after.
+
+Activated through dispatch as ``tuned_call(..., measure="cached"|"live")``
+— warm cache hits stay zero-measurement dict lookups (see docs/TUNING.md).
+"""
+
+from repro.profiler.calibrate import (RooflineFit, TracesimFit, fit_roofline,
+                                      fit_tracesim, mean_abs_log_error)
+from repro.profiler.cost import HybridResult, MeasuredCost, hybrid_refine
+from repro.profiler.measure import (Measurement, TimingStats, canon_value,
+                                    measure_value, supported_kernels,
+                                    time_callable, value_key)
+from repro.profiler.store import (TRACE_SCHEMA_VERSION, StoreStats,
+                                  TraceStore, default_store_path,
+                                  get_default_store, set_default_store)
+
+__all__ = [
+    "TimingStats",
+    "Measurement",
+    "time_callable",
+    "measure_value",
+    "canon_value",
+    "value_key",
+    "supported_kernels",
+    "TRACE_SCHEMA_VERSION",
+    "StoreStats",
+    "TraceStore",
+    "default_store_path",
+    "get_default_store",
+    "set_default_store",
+    "MeasuredCost",
+    "HybridResult",
+    "hybrid_refine",
+    "RooflineFit",
+    "TracesimFit",
+    "fit_roofline",
+    "fit_tracesim",
+    "mean_abs_log_error",
+]

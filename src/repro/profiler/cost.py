@@ -1,0 +1,214 @@
+"""Measured cost as a drop-in objective for ``autotune.refine_discrete``.
+
+The analytic roofline is fast but blind to everything it doesn't model
+(padding cliffs, interpreter overhead, compiler fusions).  This module
+lets refinement optimize *observed seconds* instead:
+
+  * ``MeasuredCost`` — a cost callable ``value -> seconds`` backed by a
+    ``TraceStore``.  ``mode="cached"`` serves recorded medians and
+    returns +inf for unmeasured values (never touches a device — the CI
+    path); ``mode="live"`` measures misses on the spot and records them.
+  * ``hybrid_refine`` — the paper-shaped evidence loop: the roofline
+    ranks the whole candidate neighbourhood (cheap, analytic), the top-K
+    survivors are re-judged by measurement (expensive, true).  Because
+    the roofline winner is always in the top-K, the hybrid choice's
+    measured cost is <= the roofline-only choice's whenever both are
+    recorded — the invariant ``benchmarks/profiler_bench.py`` asserts.
+
+When the store holds nothing for a workload the hybrid cleanly degrades
+to the pure roofline result (``source="roofline"``) — measured tuning is
+an upgrade, never a new failure mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.core.autotune import RefineResult, refine_discrete
+from repro.core.hw import TpuParams
+from repro.profiler.measure import (SYNTH_REGISTRY, canon_value,
+                                    measure_value)
+from repro.profiler.store import TraceStore
+
+__all__ = ["MeasuredCost", "HybridResult", "hybrid_refine"]
+
+_INF = float("inf")
+
+#: roofline survivors re-judged by measurement in ``hybrid_refine``.
+DEFAULT_TOP_K = 4
+
+
+class MeasuredCost:
+    """``value -> median seconds`` from recorded (or live) measurements.
+
+    Drop it anywhere a cost callable is accepted —
+    ``refine_discrete(seed, MeasuredCost(...), candidates=...)`` refines
+    against observation instead of the model.  Counters expose exactly
+    how much measuring a resolution cost (the zero-measurement warm-hit
+    assertions read them).
+    """
+
+    def __init__(
+        self,
+        kernel: str,
+        desc: dict,
+        hw: TpuParams,
+        *,
+        store: TraceStore,
+        mode: str = "cached",
+        sig_key: Optional[str] = None,
+        hw_key: Optional[str] = None,
+        measure_opts: Optional[dict] = None,
+    ):
+        if mode not in ("cached", "live"):
+            raise ValueError(f"mode must be 'cached' or 'live', got {mode!r}")
+        self.kernel = kernel
+        self.desc = desc
+        self.hw = hw
+        self.store = store
+        self.mode = mode
+        self.measure_opts = dict(measure_opts or {})
+        if sig_key is None or hw_key is None:
+            from repro.tuner.dispatch import KERNEL_REGISTRY
+            from repro.tuner.signature import hardware_key
+            sig_key = sig_key or KERNEL_REGISTRY[kernel].sig(desc, "tuned").key
+            hw_key = hw_key or hardware_key(hw)
+        self.sig_key = sig_key
+        self.hw_key = hw_key
+        # a kernel we cannot synthesize inputs for can never measure live
+        self._can_measure = kernel in SYNTH_REGISTRY
+        # records must characterize the executor being tuned: same
+        # backend, same interpret mode.  ``measure_opts["interpret"]``
+        # states the caller's mode; None auto-selects like measure_value
+        # (compiled on TPU, interpret elsewhere).
+        import jax
+        self._backend = jax.default_backend()
+        want = self.measure_opts.get("interpret")
+        self._want_interpret = (self._backend != "tpu") if want is None \
+            else bool(want)
+        # counters
+        self.served_cached = 0
+        self.measured_live = 0
+        self.unmeasured = 0
+        self.mode_mismatched = 0
+
+    def _mode_matches(self, m) -> bool:
+        """Records without backend metadata (hand-built fixtures) always
+        match; recorded ones must match executor and interpret mode."""
+        if not m.backend:
+            return True
+        return (m.backend == self._backend
+                and m.interpret == self._want_interpret)
+
+    def __call__(self, value: Any) -> float:
+        value = canon_value(value)
+        m = self.store.get(self.hw_key, self.sig_key, value)
+        if m is not None and not self._mode_matches(m):
+            self.mode_mismatched += 1
+            m = None
+        if m is not None:
+            self.served_cached += 1
+            return m.median_s
+        if self.mode == "live" and self._can_measure:
+            m = measure_value(self.kernel, self.desc, value, self.hw,
+                              **self.measure_opts)
+            self.store.add(m)
+            self.measured_live += 1
+            return m.median_s
+        self.unmeasured += 1
+        return _INF
+
+    @property
+    def observations(self) -> int:
+        """Values this callable answered from evidence (cache or live)."""
+        return self.served_cached + self.measured_live
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridResult:
+    """Outcome of one roofline-prune + measured-pick resolution."""
+
+    value: Any                     # the winning decision value
+    source: str                    # "measured" | "roofline"
+    roofline: RefineResult         # the full analytic pass
+    measured: Optional[RefineResult]   # the top-K measured pass (or None)
+    top_k: tuple                   # candidates that survived the prune
+    measured_hits: int             # measured values served from the store
+    live_measurements: int         # measurements taken during this call
+
+    @property
+    def probes(self) -> int:
+        extra = self.measured.probes if self.measured is not None else 0
+        return self.roofline.probes + extra
+
+    @property
+    def measured_cost(self) -> Optional[float]:
+        if self.measured is None or self.measured.best_cost == _INF:
+            return None
+        return self.measured.best_cost
+
+    @property
+    def roofline_cost(self) -> float:
+        return self.roofline.best_cost
+
+
+def hybrid_refine(
+    kernel: str,
+    desc: dict,
+    hw: TpuParams,
+    *,
+    store: TraceStore,
+    mode: str = "cached",
+    top_k: int = DEFAULT_TOP_K,
+    measure_opts: Optional[dict] = None,
+) -> HybridResult:
+    """Refine one workload: roofline prunes, measurement decides.
+
+    1. Seed with the Eq. 1 plan and rank the kernel's full candidate
+       neighbourhood under its analytic cost model (``refine_discrete``
+       records every evaluation).
+    2. Keep the ``top_k`` cheapest *feasible* candidates — always
+       including the roofline winner.
+    3. Re-refine over just those against ``MeasuredCost``.  In
+       ``cached`` mode unmeasured survivors cost +inf (store-only); in
+       ``live`` mode they are measured and recorded.
+    4. If no survivor has any evidence, fall back to the roofline
+       winner (``source="roofline"``).
+
+    Requires the kernel to own a cost model (dispatch falls back to the
+    Eq. 1 seed before ever calling this for the ones that don't).
+    """
+    from repro.tuner.dispatch import KERNEL_REGISTRY
+
+    spec = KERNEL_REGISTRY[kernel]
+    if spec.cost_model is None:
+        raise ValueError(f"kernel {kernel!r} has no cost model to prune with")
+
+    from repro.core.mapper import MappingPolicy
+    seed_value = canon_value(
+        spec.plan_value(spec.seed_plan(desc, hw, MappingPolicy.TUNED)))
+    cost_fn = spec.cost_model(desc, hw)
+    cands = [canon_value(c) for c in spec.candidates(desc, hw, seed_value)]
+    roofline = refine_discrete(seed_value, cost_fn, candidates=cands)
+
+    ranked = [(v, c) for v, c in roofline.ranked() if c != _INF]
+    survivors = [v for v, _ in ranked[:max(1, top_k)]]
+    if canon_value(roofline.best) not in survivors:
+        survivors.append(canon_value(roofline.best))
+
+    mc = MeasuredCost(kernel, desc, hw, store=store, mode=mode,
+                      measure_opts=measure_opts)
+    measured = refine_discrete(canon_value(roofline.best), mc,
+                               candidates=survivors)
+    if mc.observations == 0:                     # no evidence at all
+        return HybridResult(
+            value=canon_value(roofline.best), source="roofline",
+            roofline=roofline, measured=measured, top_k=tuple(survivors),
+            measured_hits=mc.served_cached,
+            live_measurements=mc.measured_live)
+    return HybridResult(
+        value=canon_value(measured.best), source="measured",
+        roofline=roofline, measured=measured, top_k=tuple(survivors),
+        measured_hits=mc.served_cached,
+        live_measurements=mc.measured_live)

@@ -15,10 +15,10 @@ See docs/TUNING.md for the file format and how to register a kernel.
 """
 
 from repro.tuner.cache import CacheStats, TuningCache, default_cache_path
-from repro.tuner.dispatch import (KERNEL_REGISTRY, KernelSpec, ResolveInfo,
-                                  get_default_cache, register_kernel,
-                                  resolve_mesh_plan, resolve_plan,
-                                  set_default_cache, tuned_call)
+from repro.tuner.dispatch import (KERNEL_REGISTRY, MEASURE_MODES, KernelSpec,
+                                  ResolveInfo, get_default_cache,
+                                  register_kernel, resolve_mesh_plan,
+                                  resolve_plan, set_default_cache, tuned_call)
 from repro.tuner.signature import (SCHEMA_VERSION, WorkloadSignature,
                                    hardware_key, workload_signature)
 
@@ -32,6 +32,7 @@ __all__ = [
     "default_cache_path",
     "KernelSpec",
     "KERNEL_REGISTRY",
+    "MEASURE_MODES",
     "ResolveInfo",
     "register_kernel",
     "resolve_plan",

@@ -40,7 +40,7 @@ from typing import Any, Optional, Union
 
 from repro.tuner.signature import SCHEMA_VERSION, WorkloadSignature
 
-__all__ = ["CacheStats", "TuningCache", "default_cache_path"]
+__all__ = ["CacheStats", "TuningCache", "default_cache_path", "file_lock"]
 
 
 def default_cache_path() -> str:
@@ -78,9 +78,10 @@ def _sig_key(sig: Union[WorkloadSignature, str]) -> str:
 
 
 @contextlib.contextmanager
-def _file_lock(path: str):
+def file_lock(path: str):
     """Advisory lock around load-merge-replace; no-op where fcntl is
-    unavailable (atomic replace still prevents torn reads)."""
+    unavailable (atomic replace still prevents torn reads).  Shared with
+    ``profiler.store``, which persists with the same semantics."""
     try:
         import fcntl
     except ImportError:          # non-POSIX: rely on os.replace atomicity
@@ -141,7 +142,8 @@ class TuningCache:
     def put(self, hw_key: str, sig: Union[WorkloadSignature, str],
             plan: dict, *, cost: Optional[float] = None,
             seed_cost: Optional[float] = None, probes: int = 0,
-            refine_time_s: float = 0.0) -> dict:
+            refine_time_s: float = 0.0,
+            extra: Optional[dict] = None) -> dict:
         k = self.full_key(hw_key, sig)
         entry = {
             "plan": dict(plan),
@@ -151,6 +153,10 @@ class TuningCache:
             "refine_time_s": float(refine_time_s),
             "created": time.time(),
         }
+        if extra:
+            # provenance riders (e.g. the profiler's measured=True flag);
+            # the reserved fields above always win on a name clash
+            entry = {**dict(extra), **entry}
         self._mem[k] = entry
         self._mem.move_to_end(k)
         self.stats.puts += 1
@@ -203,7 +209,7 @@ class TuningCache:
             return
         d = os.path.dirname(self.path) or "."
         os.makedirs(d, exist_ok=True)
-        with _file_lock(self.path + ".lock"):
+        with file_lock(self.path + ".lock"):
             self._merge(self._read_disk())
             blob = {"version": SCHEMA_VERSION, "entries": dict(self._mem)}
             fd, tmp = tempfile.mkstemp(prefix=".tuning_cache.", dir=d)

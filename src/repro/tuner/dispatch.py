@@ -22,6 +22,12 @@ seed: still cached, zero probes, never an error.
 
 ``NAIVE`` / ``FIXED`` / ``AUTO`` bypass the cache entirely and hit the
 pure planners — dispatch adds nothing but a function call for them.
+
+``measure="cached"|"live"`` upgrades step 3: the roofline ranks the
+candidate neighbourhood, and the top-K survivors are re-judged by
+recorded (or live) measurements from the ``repro.profiler`` trace store
+— the paper's evidence loop, closed (see docs/TUNING.md).  Step 2 is
+untouched: warm hits never measure.
 """
 
 from __future__ import annotations
@@ -37,6 +43,7 @@ from repro.core.mapper import (MappingPolicy, MeshPlan,
                                matmul_plan_for_blocks, plan_attention_blocks,
                                plan_matmul_blocks, plan_microbatch,
                                plan_vector_blocks, vector_plan_for_block)
+from repro.core.roofline import kernel_roofline_seconds
 from repro.core.workload import saxpy as saxpy_workload
 from repro.core.workload import vecadd as vecadd_workload
 from repro.tuner.cache import TuningCache, default_cache_path
@@ -46,6 +53,7 @@ from repro.tuner.signature import (WorkloadSignature, hardware_key,
 __all__ = [
     "KernelSpec",
     "KERNEL_REGISTRY",
+    "MEASURE_MODES",
     "ResolveInfo",
     "resolve_plan",
     "tuned_call",
@@ -125,12 +133,13 @@ def register_kernel(spec: KernelSpec) -> KernelSpec:
 class ResolveInfo:
     """Provenance of one resolved plan (tests + tuner_bench assert on it)."""
 
-    source: str                 # planner | cache | refined | fallback
+    source: str                 # planner | cache | refined | measured | fallback
     probes: int                 # refine probes spent THIS resolution
     refine_time_s: float = 0.0
     cost: Optional[float] = None
     seed_cost: Optional[float] = None
     sig_key: Optional[str] = None
+    measured: int = 0           # live measurements spent THIS resolution
 
 
 # Warm-path memos.  ``_KEY_MEMO`` caches (signature, hw key, full cache
@@ -164,15 +173,33 @@ def _memo_keys(spec: KernelSpec, desc: dict, policy: MappingPolicy,
     return keys
 
 
+#: valid ``measure=`` modes (see docs/TUNING.md):
+#:   off    — analytic roofline refinement only (the PR-1 behaviour);
+#:   cached — misses re-rank the roofline top-K by *recorded* traces
+#:            (zero device work: fixture/CI safe);
+#:   live   — misses measure unrecorded top-K survivors on the device
+#:            and persist the traces.
+#: Warm cache hits never measure in ANY mode — the hit path above the
+#: miss branch does not touch the profiler at all.
+MEASURE_MODES = ("off", "cached", "live")
+
+
 def resolve_plan(
     kernel: str,
     hw: TpuParams,
     policy: MappingPolicy | str,
     desc: dict,
     cache: Optional[TuningCache] = None,
+    *,
+    measure: str = "off",
+    store: Optional[Any] = None,
+    measure_opts: Optional[dict] = None,
 ) -> tuple[Any, ResolveInfo]:
     """Resolve the mapping plan for one workload under one policy."""
     spec = KERNEL_REGISTRY[kernel]
+    if measure not in MEASURE_MODES:
+        raise ValueError(f"measure must be one of {MEASURE_MODES}, "
+                         f"got {measure!r}")
     if not isinstance(policy, MappingPolicy):
         policy = MappingPolicy(policy)
     if policy is not MappingPolicy.TUNED:
@@ -199,6 +226,10 @@ def resolve_plan(
         cache.put(hwk, sig, {"value": spec.plan_value(seed)}, probes=0)
         return seed, ResolveInfo("fallback", 0, sig_key=sig.key)
 
+    if measure != "off":
+        return _resolve_measured(spec, desc, hw, cache, sig, hwk,
+                                 measure, store, measure_opts)
+
     t0 = time.perf_counter()
     cost_fn = spec.cost_model(desc, hw)
     seed_value = spec.plan_value(seed)
@@ -214,6 +245,44 @@ def resolve_plan(
                              sig_key=sig.key)
 
 
+def _resolve_measured(spec, desc, hw, cache, sig, hwk, measure, store,
+                      measure_opts):
+    """TUNED cache miss under ``measure="cached"|"live"``: roofline
+    prunes, recorded/live measurement picks (profiler.cost.hybrid_refine).
+    Falls back to the pure-roofline winner when the store holds no
+    evidence for the workload — measured mode never fails a dispatch."""
+    # lazy import: profiler builds on tuner, not the other way round
+    from repro.profiler.cost import hybrid_refine
+    from repro.profiler.store import get_default_store
+
+    store = store if store is not None else get_default_store()
+    t0 = time.perf_counter()
+    res = hybrid_refine(spec.name, desc, hw, store=store, mode=measure,
+                        measure_opts=measure_opts)
+    dt = time.perf_counter() - t0
+    plan = spec.plan_from_value(desc, hw, res.value)
+    measured_seed = None
+    if res.source == "measured":
+        # seed_cost: measured seconds of the roofline-only winner when
+        # recorded — cost/seed_cost then quantify the evidence loop's win
+        m = store.get(hwk, sig.key, res.roofline.best)
+        measured_seed = m.median_s if m is not None else None
+        cost = res.measured_cost
+    else:
+        cost, measured_seed = res.roofline_cost, res.roofline.seed_cost
+    cache.put(hwk, sig, {"value": spec.plan_value(plan)},
+              cost=cost, seed_cost=measured_seed, probes=res.probes,
+              refine_time_s=dt,
+              extra={"measured": res.source == "measured",
+                     "measure_mode": measure})
+    # "roofline" fallback reads as a plain model refinement to callers
+    source = "measured" if res.source == "measured" else "refined"
+    return plan, ResolveInfo(source, res.probes, refine_time_s=dt,
+                             cost=cost, seed_cost=measured_seed,
+                             sig_key=sig.key,
+                             measured=res.live_measurements)
+
+
 def tuned_call(
     kernel: str,
     *args: Any,
@@ -221,20 +290,32 @@ def tuned_call(
     policy: MappingPolicy | str = MappingPolicy.TUNED,
     cache: Optional[TuningCache] = None,
     interpret: bool = False,
+    measure: str = "off",
+    store: Optional[Any] = None,
+    measure_opts: Optional[dict] = None,
     **kwargs: Any,
 ) -> Any:
     """Run ``kernel`` with its mapping resolved through the tuner.
 
     The single entry point the retrofitted call sites use: signature ->
     cache -> (refine) -> run.  ``hw`` defaults to runtime detection, the
-    cache to the process-wide default.
+    cache to the process-wide default.  ``measure`` upgrades cache-miss
+    refinement from analytic to observed cost ("cached" replays the
+    trace store, "live" measures and records) — warm hits are identical
+    zero-measurement dict lookups in every mode.
     """
     spec = KERNEL_REGISTRY[kernel]
     if spec.run is None:
         raise ValueError(f"kernel {kernel!r} is plan-only (no run function)")
     hw = hw if hw is not None else detect()
     desc = spec.describe(*args, **kwargs)
-    plan, _ = resolve_plan(kernel, hw, policy, desc, cache)
+    if measure != "off":
+        # measurements must characterize the executor THIS call uses —
+        # an explicit measure_opts["interpret"] still wins
+        measure_opts = {"interpret": interpret, **(measure_opts or {})}
+    plan, _ = resolve_plan(kernel, hw, policy, desc, cache,
+                           measure=measure, store=store,
+                           measure_opts=measure_opts)
     return spec.run(plan, hw, interpret, *args, **kwargs)
 
 
@@ -261,12 +342,14 @@ def _scaled_candidates(seed: int, lo: int, quantum: int,
     return sorted(cands)
 
 
+# Both delegate to the ONE model definition in core.roofline so a
+# TpuParams calibrated by profiler.calibrate changes every cost model here.
 def _launch_s(programs: int, hw: TpuParams) -> float:
-    return programs * hw.launch_overhead_cycles / hw.clock_hz
+    return kernel_roofline_seconds(0.0, 0.0, programs, hw)
 
 
 def _roofline_s(flops: float, byts: float, hw: TpuParams) -> float:
-    return max(flops / hw.peak_flops_bf16, byts / hw.hbm_bw)
+    return kernel_roofline_seconds(flops, byts, 0, hw)
 
 
 def _db(x) -> int:

@@ -93,6 +93,27 @@ class WorkloadSignature:
     def __str__(self) -> str:  # the key IS the canonical rendering
         return self.key
 
+    def as_dict(self) -> dict:
+        """JSON-able form; ``from_dict`` round-trips it bit-exactly
+        (pinned by the property tests in tests/test_signature_props.py)."""
+        return {
+            "kernel": self.kernel,
+            "shapes": [list(s) for s in self.shapes],
+            "dtypes": list(self.dtypes),
+            "policy": self.policy,
+            "extras": [list(kv) for kv in self.extras],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "WorkloadSignature":
+        return cls(
+            kernel=d["kernel"],
+            shapes=tuple(tuple(int(x) for x in s) for s in d["shapes"]),
+            dtypes=tuple(d["dtypes"]),
+            policy=d["policy"],
+            extras=tuple((k, v) for k, v in d["extras"]),
+        )
+
 
 def workload_signature(
     kernel: str,

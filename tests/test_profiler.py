@@ -1,0 +1,457 @@
+"""Profiler subsystem: timing stats, trace store semantics, measured-cost
+refinement (hybrid top-K), calibration, and the dispatch ``measure=``
+modes — including the acceptance criteria: fixture-driven measured
+tuning with zero device work and zero-measurement warm hits."""
+
+import dataclasses
+import json
+import os
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hw import TPU_REGISTRY, VortexParams
+from repro.core.mapper import MappingPolicy
+from repro.core.roofline import kernel_roofline_seconds
+from repro.kernels import ops
+from repro.profiler import (TRACE_SCHEMA_VERSION, Measurement, MeasuredCost,
+                            TimingStats, TraceStore, canon_value,
+                            fit_roofline, fit_tracesim, hybrid_refine,
+                            measure_value, set_default_store, time_callable,
+                            value_key)
+from repro.tuner import (TuningCache, hardware_key, resolve_plan,
+                         set_default_cache, tuned_call)
+
+HW = TPU_REGISTRY["cpu_sim"]
+HWK = hardware_key(HW)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "profiler_traces.jsonl")
+
+#: fast live-measurement settings for tests (interpret mode, one rep)
+FAST = dict(interpret=True, warmup=0, reps=1)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_defaults():
+    """Never let tests touch the user-level cache/store files."""
+    set_default_cache(TuningCache(path=None))
+    set_default_store(TraceStore(path=None))
+    yield
+    set_default_cache(None)
+    set_default_store(None)
+
+
+def _stats(median=1e-3, reps=3) -> TimingStats:
+    return TimingStats(reps=reps, warmup=1, median_s=median, iqr_s=median / 10,
+                       mean_s=median, min_s=median * 0.9, max_s=median * 1.1)
+
+
+def _meas(kernel="vecadd", sig_key="vecadd|4096|float32|tuned|", value=1024,
+          median=1e-3, created=1.0, **kw) -> Measurement:
+    return Measurement(kernel=kernel, hw_key=HWK, sig_key=sig_key,
+                       value=canon_value(value), stats=_stats(median),
+                       created=created, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Timing statistics
+# --------------------------------------------------------------------------- #
+
+
+def test_timing_stats_median_iqr():
+    s = TimingStats.from_samples([1.0, 2.0, 3.0, 4.0, 100.0], warmup=1)
+    assert s.median_s == 3.0                       # outlier doesn't move it
+    assert s.min_s == 1.0 and s.max_s == 100.0
+    assert s.reps == 5 and s.warmup == 1
+    assert s.iqr_s > 0
+
+
+def test_timing_stats_json_roundtrip():
+    s = _stats()
+    assert TimingStats.from_dict(json.loads(json.dumps(s.as_dict()))) == s
+
+
+def test_time_callable_counts_reps():
+    calls = []
+    out = jnp.zeros(8)
+    s = time_callable(lambda: calls.append(1) or out, warmup=2, reps=4)
+    assert len(calls) == 6 and s.reps == 4 and s.median_s >= 0
+
+
+# --------------------------------------------------------------------------- #
+# Value canonicalization + Measurement records
+# --------------------------------------------------------------------------- #
+
+
+def test_canon_value_and_key():
+    assert canon_value([256, 256, 1024]) == (256, 256, 1024)
+    assert canon_value((8,)) == (8,)
+    assert canon_value(np.int64(7)) == 7 and type(canon_value(np.int64(7))) is int
+    assert value_key([128, 64]) == "128x64" and value_key(512) == "512"
+
+
+def test_measurement_record_roundtrip():
+    m = _meas(value=[256, 128], desc={"n": 4096, "dtype": "float32"},
+              programs=16, flops=1e6, hbm_bytes=5e4, xla_flops=2e6,
+              backend="cpu", interpret=True)
+    m2 = Measurement.from_record(json.loads(json.dumps(m.to_record())))
+    assert m2 == m
+    assert m2.value == (256, 128)
+    assert m2.per_program_s == pytest.approx(m.median_s / 16)
+    assert m2.per_byte_s == pytest.approx(m.median_s / 5e4)
+
+
+# --------------------------------------------------------------------------- #
+# Trace store
+# --------------------------------------------------------------------------- #
+
+
+def test_store_roundtrip_through_disk(tmp_path):
+    path = str(tmp_path / "traces.jsonl")
+    s1 = TraceStore(path)
+    s1.add(_meas(programs=4, flops=1e3, hbm_bytes=1e4))
+    s2 = TraceStore(path)
+    got = s2.get(HWK, "vecadd|4096|float32|tuned|", 1024)
+    assert got is not None and got.median_s == pytest.approx(1e-3)
+    assert s2.stats.hits == 1
+
+
+def test_store_dedupe_newest_wins():
+    s = TraceStore(path=None)
+    assert s.add(_meas(median=1e-3, created=10.0))
+    assert not s.add(_meas(median=2e-3, created=5.0))     # stale: refused
+    assert s.stats.dropped_stale == 1
+    assert s.get(HWK, "vecadd|4096|float32|tuned|", 1024).median_s == 1e-3
+    assert s.add(_meas(median=3e-3, created=20.0))        # newer: replaces
+    assert s.get(HWK, "vecadd|4096|float32|tuned|", 1024).median_s == 3e-3
+    assert len(s) == 1
+
+
+def test_store_version_mismatch_discards(tmp_path):
+    path = str(tmp_path / "traces.jsonl")
+    s1 = TraceStore(path)
+    s1.add(_meas())
+    lines = open(path).read().splitlines()
+    header = json.loads(lines[0])
+    header["version"] = TRACE_SCHEMA_VERSION + 1
+    open(path, "w").write("\n".join([json.dumps(header)] + lines[1:]))
+    assert len(TraceStore(path)) == 0
+
+
+def test_store_corrupt_lines_skipped(tmp_path):
+    path = str(tmp_path / "traces.jsonl")
+    s1 = TraceStore(path)
+    s1.add(_meas())
+    with open(path, "a") as f:
+        f.write("{torn line\n")                   # killed appender
+    s2 = TraceStore(path)
+    assert len(s2) == 1                           # good record survives
+    s2.add(_meas(value=2048))                     # and the store still saves
+    assert len(TraceStore(path)) == 2
+
+
+def test_store_concurrent_writers_merge(tmp_path):
+    path = str(tmp_path / "traces.jsonl")
+
+    def writer(i):
+        TraceStore(path).add(_meas(value=1024 + i * 128, created=float(i + 1)))
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    merged = TraceStore(path)
+    for i in range(8):
+        assert merged.get(HWK, "vecadd|4096|float32|tuned|",
+                          1024 + i * 128) is not None, i
+
+
+def test_store_lookup_by_workload():
+    s = TraceStore(path=None)
+    for v in (512, 1024, 2048):
+        s.add(_meas(value=v))
+    s.add(_meas(sig_key="other|8|float32|tuned|", value=512))
+    assert [m.value for m in s.lookup(HWK, "vecadd|4096|float32|tuned|")] \
+        == [1024, 2048, 512]                       # key-sorted, other sig excluded
+
+
+# --------------------------------------------------------------------------- #
+# Live measurement
+# --------------------------------------------------------------------------- #
+
+
+def test_measure_value_live_vecadd():
+    desc = {"n": 4096, "dtype": "float32", "dtype_bytes": 4}
+    m = measure_value("vecadd", desc, 1024, HW, **FAST)
+    assert m.kernel == "vecadd" and m.value == 1024
+    assert m.median_s > 0 and m.programs == 4
+    assert m.flops == 4096 and m.hbm_bytes == 3 * 4096 * 4
+    assert m.desc == desc and m.hw_key == HWK and m.source == "live"
+
+
+def test_measure_value_rejects_unknown():
+    with pytest.raises(ValueError, match="plan-only"):
+        measure_value("mesh_microbatch", {}, 1, HW)
+
+
+# --------------------------------------------------------------------------- #
+# MeasuredCost + hybrid refinement
+# --------------------------------------------------------------------------- #
+
+_SIG = "vecadd|4096|float32|tuned|"
+_DESC = {"n": 4096, "dtype": "float32", "dtype_bytes": 4}
+
+
+def test_measured_cost_cached_mode():
+    s = TraceStore(path=None)
+    s.add(_meas(value=1024, median=5e-4))
+    mc = MeasuredCost("vecadd", _DESC, HW, store=s, mode="cached")
+    assert mc(1024) == pytest.approx(5e-4)
+    assert mc([1024]) == pytest.approx(5e-4)       # canonicalized lookup
+    assert mc(2048) == float("inf")
+    assert (mc.served_cached, mc.unmeasured, mc.measured_live) == (2, 1, 0)
+
+
+def test_measured_cost_ignores_wrong_mode_records():
+    """Evidence from a different executor (backend/interpret mode) must
+    not decide this one's plan."""
+    s = TraceStore(path=None)
+    s.add(_meas(value=1024, median=5e-4, backend="tpu", interpret=False))
+    mc = MeasuredCost("vecadd", _DESC, HW, store=s, mode="cached")
+    assert mc(1024) == float("inf")           # cpu/interpret caller: no match
+    assert mc.mode_mismatched == 1 and mc.served_cached == 0
+
+    s2 = TraceStore(path=None)
+    s2.add(_meas(value=1024, median=5e-4, backend="cpu", interpret=True))
+    mc2 = MeasuredCost("vecadd", _DESC, HW, store=s2, mode="cached")
+    assert mc2(1024) == pytest.approx(5e-4)   # same mode: served
+
+
+def test_measured_cost_live_mode_records():
+    s = TraceStore(path=None)
+    mc = MeasuredCost("vecadd", _DESC, HW, store=s, mode="live",
+                      measure_opts=FAST)
+    t = mc(1024)
+    assert t > 0 and len(s) == 1
+    assert mc(1024) == pytest.approx(t)            # second call: served, not re-measured
+    assert (mc.measured_live, mc.served_cached) == (1, 1)
+
+
+def _fixture_for(kernel, desc, costs: dict):
+    """Synthetic store holding given measured costs for one workload."""
+    from repro.tuner import KERNEL_REGISTRY
+    sig = KERNEL_REGISTRY[kernel].sig(desc, "tuned")
+    s = TraceStore(path=None)
+    for value, median in costs.items():
+        s.add(Measurement(kernel=kernel, hw_key=HWK, sig_key=sig.key,
+                          value=canon_value(value), stats=_stats(median),
+                          desc=dict(desc), created=1.0))
+    return s
+
+
+def test_hybrid_prefers_measured_winner():
+    # make a mid-size block measurably fastest even though the roofline
+    # prefers the largest: measurement must override the model
+    from repro.tuner import KERNEL_REGISTRY
+    spec = KERNEL_REGISTRY["vecadd"]
+    seed = spec.plan_value(spec.seed_plan(_DESC, HW, MappingPolicy.TUNED))
+    cands = spec.candidates(_DESC, HW, seed)
+    cost_fn = spec.cost_model(_DESC, HW)
+    by_roofline = sorted(c for c in cands if cost_fn(c) != float("inf"))
+    a, b = by_roofline[0], by_roofline[-1]
+    store = _fixture_for("vecadd", _DESC, {c: 1e-3 for c in cands} | {a: 1e-6})
+
+    res = hybrid_refine("vecadd", _DESC, HW, store=store, mode="cached",
+                        top_k=len(cands))
+    assert res.source == "measured"
+    assert res.value == canon_value(a)
+    assert res.live_measurements == 0
+    assert res.measured_cost == pytest.approx(1e-6)
+
+
+def test_hybrid_topk_prunes_lookups():
+    store = _fixture_for("vecadd", _DESC, {})
+    res = hybrid_refine("vecadd", _DESC, HW, store=store, mode="cached",
+                        top_k=2)
+    assert len(res.top_k) <= 3                     # K + roofline winner
+    assert store.stats.lookups == len(res.top_k)   # only survivors looked up
+
+
+def test_hybrid_empty_store_falls_back_to_roofline():
+    store = TraceStore(path=None)
+    res = hybrid_refine("vecadd", _DESC, HW, store=store, mode="cached")
+    assert res.source == "roofline"
+    assert res.value == canon_value(res.roofline.best)
+    assert res.live_measurements == 0 and len(store) == 0
+
+
+# --------------------------------------------------------------------------- #
+# Calibration
+# --------------------------------------------------------------------------- #
+
+
+def test_fit_roofline_recovers_perturbed_model():
+    """Records generated EXACTLY by the model under different constants:
+    the fit must land near them and beat the starting error."""
+    true = dataclasses.replace(HW, peak_flops_bf16=HW.peak_flops_bf16 / 50,
+                               hbm_bw=HW.hbm_bw / 20,
+                               launch_overhead_cycles=100_000)
+    recs = []
+    for i, (f, b, p) in enumerate([(1e9, 1e6, 4), (1e7, 1e8, 16),
+                                   (5e8, 5e7, 2), (1e6, 1e5, 64),
+                                   (2e9, 2e6, 1), (3e7, 3e8, 8)]):
+        t = kernel_roofline_seconds(f, b, p, true)
+        recs.append(_meas(value=128 * (i + 1), median=t, flops=f,
+                          hbm_bytes=b, programs=p))
+    fit = fit_roofline(recs, HW)
+    assert fit.err_after <= fit.err_before
+    assert fit.err_after < 0.2                     # near-perfect recovery
+    assert fit.n_records == 6 and len(fit.table) == 6
+
+
+def test_fit_roofline_never_regresses():
+    recs = [_meas(value=v, median=kernel_roofline_seconds(1e6 * v, 1e4 * v,
+                                                          v, HW),
+                  flops=1e6 * v, hbm_bytes=1e4 * v, programs=v)
+            for v in (1, 2, 4, 8)]
+    fit = fit_roofline(recs, HW)                   # already a perfect model
+    assert fit.err_after <= fit.err_before
+    assert fit.err_before == pytest.approx(0.0, abs=1e-9)
+
+
+def test_fit_roofline_needs_records():
+    with pytest.raises(ValueError, match="usable records"):
+        fit_roofline([_meas()], HW)                # no flops/bytes features
+
+
+def test_fit_tracesim_improves_or_matches():
+    recs = []
+    for n in (4096, 16384):
+        desc = {"n": n, "dtype": "float32", "dtype_bytes": 4}
+        for blk in (1024, 2048):
+            recs.append(_meas(sig_key=f"vecadd|{n}|float32|tuned|",
+                              value=blk, median=1e-4 * (n / blk),
+                              desc=desc))
+    ts = fit_tracesim(recs, VortexParams(cores=16, warps=8, threads=16))
+    assert ts.err_after <= ts.err_before
+    assert ts.seconds_per_cycle > 0 and ts.n_records == 4
+
+
+# --------------------------------------------------------------------------- #
+# Dispatch integration: measure= modes
+# --------------------------------------------------------------------------- #
+
+
+def test_resolve_plan_rejects_bad_measure_mode():
+    with pytest.raises(ValueError, match="measure"):
+        resolve_plan("vecadd", HW, MappingPolicy.TUNED, _DESC,
+                     TuningCache(path=None), measure="sometimes")
+
+
+def test_tuned_call_live_then_zero_measurement_warm_hit():
+    """Acceptance criterion: warm hits perform ZERO measurements."""
+    cache = TuningCache(path=None)
+    store = TraceStore(path=None)
+    x = jnp.arange(4096, dtype=jnp.float32)
+
+    out = tuned_call("vecadd", x, x, hw=HW, cache=cache, interpret=True,
+                     measure="live", store=store, measure_opts=FAST)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(2.0 * x))
+    cold = (store.stats.recorded, store.stats.lookups)
+    assert cold[0] > 0                             # the miss really measured
+
+    out = tuned_call("vecadd", x, x, hw=HW, cache=cache, interpret=True,
+                     measure="live", store=store, measure_opts=FAST)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(2.0 * x))
+    assert cache.stats.hits == 1
+    assert store.stats.recorded == cold[0]         # zero new measurements
+    assert store.stats.lookups == cold[1]          # not even a lookup
+
+
+def test_resolve_cached_mode_uses_store_evidence():
+    from repro.tuner import KERNEL_REGISTRY
+    spec = KERNEL_REGISTRY["vecadd"]
+    seed = spec.plan_value(spec.seed_plan(_DESC, HW, MappingPolicy.TUNED))
+    cands = spec.candidates(_DESC, HW, seed)
+    cost_fn = spec.cost_model(_DESC, HW)
+    finite = sorted(c for c in cands if cost_fn(c) != float("inf"))
+    fastest = finite[0]
+    store = _fixture_for("vecadd", _DESC,
+                         {c: 1e-3 for c in cands} | {fastest: 1e-6})
+
+    cache = TuningCache(path=None)
+    plan, info = resolve_plan("vecadd", HW, MappingPolicy.TUNED, _DESC, cache,
+                              measure="cached", store=store,
+                              measure_opts=FAST)
+    assert info.source == "measured" and info.measured == 0
+    entry = cache.get(HWK, spec.sig(_DESC, MappingPolicy.TUNED))
+    assert entry["measured"] is True and entry["measure_mode"] == "cached"
+
+    # warm resolution: plain cache hit, store untouched
+    lookups = store.stats.lookups
+    plan2, info2 = resolve_plan("vecadd", HW, MappingPolicy.TUNED, _DESC,
+                                cache, measure="cached", store=store)
+    assert info2.source == "cache" and info2.probes == 0
+    assert plan2 == plan and store.stats.lookups == lookups
+
+
+def test_ops_measuring_context_routes_default_store():
+    cache = TuningCache(path=None)
+    store = TraceStore(path=None)
+    set_default_cache(cache)
+    set_default_store(store)
+    x = jnp.arange(2048, dtype=jnp.float32)
+    with ops.force("interpret"), ops.policy("tuned"):
+        with ops.measuring("cached"):
+            ops.vecadd(x, x, hw=HW)
+        assert cache.stats.misses == 1
+        assert store.stats.lookups > 0             # consulted (and empty)
+        ops.vecadd(x, x, hw=HW)                    # warm, measuring off again
+        assert cache.stats.hits == 1
+    assert ops.get_default_measure() == "off"
+
+
+# --------------------------------------------------------------------------- #
+# The committed fixture: measured tuning end-to-end, no device
+# --------------------------------------------------------------------------- #
+
+
+def _fixture_store() -> TraceStore:
+    assert os.path.exists(FIXTURE), f"fixture missing: {FIXTURE}"
+    return TraceStore(FIXTURE, autosave=False)
+
+
+def test_fixture_covers_three_kernels_on_cpu_sim():
+    s = _fixture_store()
+    assert len({m.kernel for m in s.records()}) >= 3
+    assert all(m.hw_key == HWK for m in s.records())
+    assert all(m.stats.median_s > 0 for m in s.records())
+
+
+def test_fixture_hybrid_never_worse_than_roofline():
+    """Acceptance criterion: hybrid cost <= roofline-only cost, per
+    workload, judged by the fixture's own measurements."""
+    s = _fixture_store()
+    workloads = {(m.kernel, json.dumps(m.desc, sort_keys=True)): m
+                 for m in s.records() if m.desc}
+    assert len(workloads) >= 3
+    for m in workloads.values():
+        res = hybrid_refine(m.kernel, m.desc, HW, store=s, mode="cached")
+        assert res.source == "measured", (m.kernel, res.top_k)
+        assert res.live_measurements == 0
+        hybrid = s.get(m.hw_key, m.sig_key, res.value)
+        roof = s.get(m.hw_key, m.sig_key, res.roofline.best)
+        assert hybrid is not None and roof is not None
+        assert hybrid.median_s <= roof.median_s, m.kernel
+
+
+def test_fixture_calibration_reduces_model_error():
+    """Acceptance criterion: calibrate.py reduces roofline error."""
+    s = _fixture_store()
+    fit = fit_roofline(s.records(), HW)
+    assert fit.err_after < fit.err_before          # strict: real data
+    assert fit.improvement > 1.5                   # and by a margin

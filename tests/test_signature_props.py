@@ -1,0 +1,89 @@
+"""Property tests: WorkloadSignature / hardware-key stability.
+
+The tuning cache and the trace store both assume signature keys are
+*canonical*: invariant to how a caller happened to order kwargs or
+spell dtypes, and stable through JSON persistence.  Hypothesis hunts
+the counterexamples."""
+
+import dataclasses
+import json
+
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.core.hw import TPU_REGISTRY, TpuParams  # noqa: E402
+from repro.tuner import (WorkloadSignature, hardware_key,  # noqa: E402
+                         workload_signature)
+
+shapes_st = st.lists(
+    st.one_of(st.integers(1, 1 << 20),
+              st.lists(st.integers(1, 1 << 16), min_size=1, max_size=4)
+              .map(tuple)),
+    min_size=1, max_size=3)
+
+dtypes_st = st.lists(st.sampled_from(["float32", "bfloat16", "int32",
+                                      "float16", "int8"]),
+                     min_size=1, max_size=3)
+
+extras_st = st.dictionaries(
+    st.sampled_from(["causal", "ksize", "win", "block_s", "flag"]),
+    st.one_of(st.booleans(), st.integers(-1024, 1024),
+              st.floats(allow_nan=False, allow_infinity=False, width=32)),
+    max_size=4)
+
+
+@settings(max_examples=200, deadline=None)
+@given(shapes=shapes_st, dtypes=dtypes_st, extras=extras_st,
+       seed=st.randoms())
+def test_signature_invariant_to_kwarg_order(shapes, dtypes, extras, seed):
+    """Any permutation of the extras dict yields the identical signature."""
+    a = workload_signature("k", shapes=shapes, dtypes=dtypes, **extras)
+    items = list(extras.items())
+    seed.shuffle(items)
+    b = workload_signature("k", shapes=shapes, dtypes=dtypes, **dict(items))
+    assert a == b and a.key == b.key
+
+
+@settings(max_examples=200, deadline=None)
+@given(shapes=shapes_st, dtypes=dtypes_st, extras=extras_st,
+       policy=st.sampled_from(["naive", "fixed", "auto", "tuned"]))
+def test_signature_json_roundtrip(shapes, dtypes, extras, policy):
+    """as_dict -> json -> from_dict reproduces the signature bit-exactly."""
+    sig = workload_signature("k", shapes=shapes, dtypes=dtypes,
+                             policy=policy, **extras)
+    back = WorkloadSignature.from_dict(json.loads(json.dumps(sig.as_dict())))
+    assert back == sig and back.key == sig.key
+
+
+@settings(max_examples=100, deadline=None)
+@given(chips=st.integers(1, 4096),
+       vmem=st.integers(1 << 20, 1 << 28),
+       clock=st.floats(1e8, 2e9, allow_nan=False))
+def test_hardware_key_tracks_every_field_change(chips, vmem, clock):
+    """Any planning-relevant TpuParams change must change the key (so a
+    stale plan can never be replayed), and rebuilding the same params
+    must reproduce it (so persistence works)."""
+    base = TPU_REGISTRY["cpu_sim"]
+    hw = dataclasses.replace(base, num_chips=chips,
+                             vmem_budget_bytes=vmem, clock_hz=clock)
+    same = dataclasses.replace(base, num_chips=chips,
+                               vmem_budget_bytes=vmem, clock_hz=clock)
+    assert hardware_key(hw) == hardware_key(same)
+    if (chips, vmem, clock) != (base.num_chips, base.vmem_budget_bytes,
+                                base.clock_hz):
+        assert hardware_key(hw) != hardware_key(base)
+
+
+@settings(max_examples=100, deadline=None)
+@given(n=st.integers(1, 1 << 24),
+       dtype=st.sampled_from(["float32", "bfloat16", "int32"]))
+def test_signature_equivalent_descriptions_collide(n, dtype):
+    """Ints, tuples and numpy dtypes describing the same workload must
+    share one cache line."""
+    import numpy as np
+    a = workload_signature("k", shapes=[n], dtypes=[dtype])
+    b = workload_signature("k", shapes=[(n,)], dtypes=[np.dtype(dtype)])
+    assert a.key == b.key

@@ -57,6 +57,16 @@ def test_signature_distinguishes_workloads():
         "k", shapes=[(128,)], dtypes=["float32"], flag=1).key
 
 
+def test_signature_json_roundtrip():
+    """as_dict/from_dict survive JSON bit-exactly (the hypothesis sweep
+    over this lives in test_signature_props.py)."""
+    sig = workload_signature("k", shapes=[(128, 64), 32],
+                             dtypes=["float32", "int32"],
+                             policy=MappingPolicy.TUNED, causal=True, win=128)
+    back = WorkloadSignature.from_dict(json.loads(json.dumps(sig.as_dict())))
+    assert back == sig and back.key == sig.key
+
+
 def test_hardware_key_distinguishes_parts():
     assert hardware_key(TPU_REGISTRY["cpu_sim"]) \
         != hardware_key(TPU_REGISTRY["tpu_v5e"])
@@ -311,12 +321,25 @@ def test_all_registered_kernels_correct_under_tuned():
 def test_ops_layer_routes_tuned_through_default_cache():
     cache = TuningCache(path=None)
     set_default_cache(cache)
-    ops.set_force_mode("interpret")
-    try:
+    with ops.force("interpret"), ops.policy("tuned"):
         x = jnp.arange(4096, dtype=jnp.float32)
-        ops.vecadd(x, x, policy="tuned", hw=HW)
+        ops.vecadd(x, x, hw=HW)
         assert cache.stats.misses == 1
-        ops.vecadd(x, x, policy="tuned", hw=HW)
+        ops.vecadd(x, x, hw=HW)
         assert cache.stats.hits == 1
-    finally:
-        ops.set_force_mode("auto")
+
+
+def test_ops_context_managers_restore_state():
+    """The scoped forms never leak process-wide configuration — even when
+    the body raises."""
+    assert ops._DEFAULT_POLICY is MappingPolicy.AUTO and ops._FORCE == "auto"
+    with ops.policy("tuned"), ops.force("ref"):
+        assert ops._DEFAULT_POLICY is MappingPolicy.TUNED
+        assert ops._FORCE == "ref"
+    assert ops._DEFAULT_POLICY is MappingPolicy.AUTO and ops._FORCE == "auto"
+
+    with pytest.raises(RuntimeError):
+        with ops.policy("naive"), ops.measuring("cached"):
+            raise RuntimeError("boom")
+    assert ops._DEFAULT_POLICY is MappingPolicy.AUTO
+    assert ops.get_default_measure() == "off"

@@ -1,0 +1,199 @@
+#!/usr/bin/env python
+"""Profiler CLI: sweep kernels, record traces, calibrate, inspect.
+
+    PYTHONPATH=src python tools/profile.py sweep --store traces.jsonl
+    PYTHONPATH=src python tools/profile.py sweep --kernel vecadd matmul \\
+        --reps 3 --warmup 1 --store traces.jsonl
+    PYTHONPATH=src python tools/profile.py calibrate --store traces.jsonl
+    PYTHONPATH=src python tools/profile.py report --store traces.jsonl
+
+``sweep`` measures every candidate decision value of each workload (the
+same candidate generator dispatch refines over, so recorded traces are
+exactly the values a later ``measure="cached"`` resolution will look
+up) and appends the records to the store.  The committed CI fixture
+(tests/fixtures/profiler_traces.jsonl) was produced by this command —
+see docs/TUNING.md for the workflow.
+
+On non-TPU platforms kernels run in Pallas interpret mode, so recorded
+times characterize the interpreter — which is precisely what makes the
+measured path testable without a device.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+# tools/ scripts are run from the repo root; make src/ importable even
+# without PYTHONPATH so `python tools/profile.py` just works.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+#: default sweep workloads — small enough for interpret mode on CPU,
+#: big enough that block choice moves the measured time.
+DEFAULT_WORKLOADS: list[tuple[str, dict]] = [
+    ("vecadd", {"n": 65536, "dtype": "float32", "dtype_bytes": 4}),
+    ("vecadd", {"n": 16384, "dtype": "float32", "dtype_bytes": 4}),
+    ("saxpy", {"n": 65536, "dtype": "float32", "dtype_bytes": 4}),
+    ("saxpy", {"n": 32768, "dtype": "float32", "dtype_bytes": 4}),
+    ("matmul", {"m": 128, "k": 128, "n": 128, "dtype": "float32",
+                "dtype_bytes": 4}),
+    ("rmsnorm", {"tokens": 1024, "d": 512, "dtype": "float32",
+                 "dtype_bytes": 4}),
+]
+
+
+def _hw(name: str):
+    from repro.core.hw import TPU_REGISTRY, detect
+    return detect() if name == "detect" else TPU_REGISTRY[name]
+
+
+def _fmt(t) -> str:
+    from repro.core.roofline import fmt_seconds
+    return fmt_seconds(t) if t is not None else "-"
+
+
+def cmd_sweep(args) -> int:
+    import jax
+
+    from repro.profiler import TraceStore, measure_value, supported_kernels
+    from repro.profiler.cost import hybrid_refine
+    from repro.profiler.measure import canon_value
+    from repro.tuner import KERNEL_REGISTRY
+    from repro.core.mapper import MappingPolicy
+
+    hw = _hw(args.hw)
+    interpret = args.interpret or jax.default_backend() != "tpu"
+    # autosave off: one atomic save at the end instead of a full-file
+    # rewrite per measurement
+    store = TraceStore(args.store, autosave=False)
+    workloads = [(k, d) for k, d in DEFAULT_WORKLOADS
+                 if not args.kernel or k in args.kernel]
+    if not workloads:
+        print(f"no workloads for kernels {args.kernel} "
+              f"(supported: {supported_kernels()})", file=sys.stderr)
+        return 2
+
+    print(f"# backend={jax.default_backend()} hw={hw.name} "
+          f"interpret={interpret} store={args.store}")
+    print("kernel,desc,value,median,iqr,programs,per_program")
+    for kernel, desc in workloads:
+        spec = KERNEL_REGISTRY[kernel]
+        seed = canon_value(
+            spec.plan_value(spec.seed_plan(desc, hw, MappingPolicy.TUNED)))
+        cands = sorted({canon_value(c)
+                        for c in spec.candidates(desc, hw, seed)} | {seed},
+                       key=str)
+        for value in cands:
+            m = measure_value(kernel, desc, value, hw, interpret=interpret,
+                              warmup=args.warmup, reps=args.reps)
+            store.add(m)
+            d = "/".join(str(v) for v in desc.values() if isinstance(v, int))
+            print(f"{kernel},{d},{value},{_fmt(m.median_s)},"
+                  f"{_fmt(m.stats.iqr_s)},{m.programs},"
+                  f"{_fmt(m.per_program_s)}")
+        store.save()                  # durability per workload, not per rep
+        res = hybrid_refine(kernel, desc, hw, store=store, mode="cached",
+                            measure_opts={"interpret": interpret})
+        print(f"# {kernel}: roofline pick {res.roofline.best} -> "
+              f"measured pick {res.value} ({res.source})")
+    store.save()
+    print(f"# store now holds {len(store)} records")
+    return 0
+
+
+def cmd_calibrate(args) -> int:
+    from repro.core.hw import VortexParams
+    from repro.profiler import TraceStore, fit_roofline, fit_tracesim
+
+    hw = _hw(args.hw)
+    store = TraceStore(args.store)
+    if len(store) == 0:
+        print(f"store {args.store} is empty — run `sweep` first",
+              file=sys.stderr)
+        return 2
+
+    fit = fit_roofline(store.records(), hw)
+    print(f"# roofline fit over {fit.n_records} records on {hw.name}")
+    print("param,before,after")
+    print(f"peak_flops,{fit.hw_before.peak_flops_bf16:.4g},"
+          f"{fit.hw_after.peak_flops_bf16:.4g}")
+    print(f"hbm_bw,{fit.hw_before.hbm_bw:.4g},{fit.hw_after.hbm_bw:.4g}")
+    print(f"launch_overhead_cycles,{fit.hw_before.launch_overhead_cycles},"
+          f"{fit.hw_after.launch_overhead_cycles}")
+    print(f"mean_abs_log_err,{fit.err_before:.4f},{fit.err_after:.4f}")
+    print()
+    print("kernel,value,measured,model_before,model_after")
+    for kernel, value, meas, before, after in fit.table:
+        print(f"{kernel},{value},{_fmt(meas)},{_fmt(before)},{_fmt(after)}")
+
+    try:
+        ts = fit_tracesim(store.records(),
+                          VortexParams(cores=16, warps=8, threads=16))
+    except ValueError as e:
+        print(f"\n# tracesim fit skipped: {e}")
+        return 0
+    print(f"\n# tracesim fit over {ts.n_records} 1D records")
+    print(f"call_overhead_cycles,{ts.cfg_before.call_overhead_cycles},"
+          f"{ts.cfg_after.call_overhead_cycles}")
+    print(f"seconds_per_cycle,-,{ts.seconds_per_cycle:.4g}")
+    print(f"mean_abs_log_err,{ts.err_before:.4f},{ts.err_after:.4f}")
+    return 0
+
+
+def cmd_report(args) -> int:
+    from repro.profiler import TraceStore
+
+    store = TraceStore(args.store)
+    print(f"# {args.store}: {len(store)} records, "
+          f"kernels={','.join(store.kernels()) or '-'}")
+    print("kernel,value,median,iqr,programs,backend,interpret,source")
+    for m in sorted(store.records(), key=lambda m: m.key):
+        print(f"{m.kernel},{m.value},{_fmt(m.median_s)},"
+              f"{_fmt(m.stats.iqr_s)},{m.programs},{m.backend},"
+              f"{m.interpret},{m.source}")
+    return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    common = argparse.ArgumentParser(add_help=False)
+    common.add_argument("--store", required=True,
+                        help="trace store JSONL path")
+    common.add_argument("--hw", default="cpu_sim",
+                        help="TPU_REGISTRY part name or 'detect'")
+
+    ps = sub.add_parser("sweep", parents=[common],
+                        help="measure candidate values, record traces")
+    ps.add_argument("--kernel", nargs="*", default=None,
+                    help="restrict to these kernels (default: all)")
+    ps.add_argument("--warmup", type=int, default=1)
+    ps.add_argument("--reps", type=int, default=3)
+    ps.add_argument("--interpret", action="store_true",
+                    help="force Pallas interpret mode (default on non-TPU)")
+    ps.set_defaults(fn=cmd_sweep)
+
+    pc = sub.add_parser("calibrate", parents=[common],
+                        help="fit model constants, print before/after error")
+    pc.set_defaults(fn=cmd_calibrate)
+
+    pr = sub.add_parser("report", parents=[common],
+                        help="list the store's records")
+    pr.set_defaults(fn=cmd_report)
+
+    args = p.parse_args(argv)
+    try:
+        return args.fn(args)
+    except BrokenPipeError:        # `... | head` closed stdout: not an error
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
