@@ -27,11 +27,11 @@ SIM_CFG = VortexParams(cores=16, warps=8, threads=16)
 
 def _time(fn, *args, reps=3):
     fn(*args)  # compile/warm
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.time() - t0) / reps * 1e6
+    return (time.perf_counter() - t0) / reps * 1e6
 
 
 def run(print_fn=print):

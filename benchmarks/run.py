@@ -9,6 +9,7 @@ Sections:
   kern   Pallas kernel suite under the 4 policies (``name,us_per_call,derived``)
   tuner  tuning-cache dispatch: warm overhead vs cold refine + policy sweep
   prof   profiler: hybrid measured tuning + calibration from the trace fixture
+  serve  serving engine: bucketed tuned dispatch vs naive/static (steady state)
   roof   roofline table from the dry-run records (single + multi mesh)
 """
 
@@ -72,6 +73,13 @@ def _run_prof() -> None:
     profiler_bench.run()
 
 
+def _run_serve() -> None:
+    from benchmarks import serve_bench
+
+    _banner("serve_bench: bucketed tuned dispatch vs naive/static serving")
+    serve_bench.run()
+
+
 def _run_roof() -> None:
     from benchmarks import roofline_table
 
@@ -87,6 +95,7 @@ SECTIONS = {
     "kern": _run_kern,
     "tuner": _run_tuner,
     "prof": _run_prof,
+    "serve": _run_serve,
     "roof": _run_roof,
 }
 

@@ -32,8 +32,8 @@ for pol in MappingPolicy:
 # --- and the same policies training end-to-end ----------------------------
 print()
 for pol in MappingPolicy:
-    t0 = time.time()
+    t0 = time.perf_counter()
     run = train("smollm-135m", steps=10, global_batch=8, seq_len=64,
                 policy=pol, verbose=False)
-    print(f"{pol.value:5s}: 10 steps in {time.time()-t0:5.1f}s, "
+    print(f"{pol.value:5s}: 10 steps in {time.perf_counter()-t0:5.1f}s, "
           f"final loss {run.losses[-1]:.3f}")

@@ -1,16 +1,44 @@
-"""Batched serving example: prefill + greedy decode over a mixed batch of
-prompts with ragged lengths (continuous-batching style pool).
+"""Continuous-batching serving example: queue a small mixed request load
+through the ``repro.serve`` engine and print per-request latency plus the
+pool's throughput — runnable in reduced mode on CPU.
+
+The engine admits ragged prompts into a 2-slot decode pool, recycles
+slots as requests finish, and resolves each shape bucket's kernel plans
+through the runtime tuner (zero-probe once the bucket is warm).
 
     PYTHONPATH=src python examples/serve_smollm.py
 """
 
 import numpy as np
 
-from repro.launch.serve import serve_batch
+from repro.serve import ServeEngine
 
 rng = np.random.default_rng(0)
-prompts = [list(rng.integers(1, 500, size=n)) for n in (5, 12, 3, 20)]
-stats = serve_batch("smollm-135m", prompts, max_new_tokens=12)
-for i, out in enumerate(stats.outputs):
-    print(f"req{i}: prompt={out[:len(prompts[i])]} -> "
-          f"generated={out[len(prompts[i]):]}")
+engine = ServeEngine("smollm-135m", slots=2, max_len=128, reduced=True)
+
+reqs = []
+for i, (plen, out_len) in enumerate([(5, 12), (12, 6), (3, 10), (20, 4),
+                                     (9, 8), (15, 6)]):
+    prompt = list(rng.integers(1, 500, size=plen))
+    # stagger arrivals: the scheduler holds future requests, the engine
+    # fast-forwards idle time, and slots recycle mid-decode
+    reqs.append(engine.submit(prompt, max_new_tokens=out_len,
+                              arrival=0.05 * i))
+
+report = engine.run()
+s = report.summary
+
+for r in reqs:
+    rec = engine.metrics.records[r.rid]
+    out = report.outputs[r.rid]
+    print(f"req{r.rid}: prompt[{r.prompt_len:2d}] -> "
+          f"generated={out[r.prompt_len:]} "
+          f"(ttft {rec.ttft * 1e3:7.1f} ms)")
+
+print(f"\n{s.n_completed}/{s.n_requests} requests, "
+      f"{s.output_tokens} tokens @ {s.tokens_per_s:.1f} tok/s, "
+      f"ttft p50/p95 {s.ttft_p50_s * 1e3:.1f}/{s.ttft_p95_s * 1e3:.1f} ms, "
+      f"pool utilization {s.utilization:.2f}")
+print(f"compiled decode shapes: {report.compiled_decode_shapes}, "
+      f"prefill shapes: {report.compiled_prefill_shapes}, "
+      f"router: {report.router_stats}")

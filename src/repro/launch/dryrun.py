@@ -71,7 +71,7 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
         plan = plan_tweak(plan)
     rep = jax.sharding.NamedSharding(plan.info.mesh,
                                      jax.sharding.PartitionSpec())
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     if shape.kind == "train":
         mb_plan = resolve_microbatches(cfg, shape, plan, policy=policy)
@@ -133,10 +133,10 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
         mf = model_flops_per_step(cfg.n_params_active(),
                                   model.tokens_per_step(shape), training=False)
 
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     hlo_text = compiled.as_text()
     chips = plan.info.n_devices

@@ -1,15 +1,20 @@
-"""Batched serving driver: continuous-batching style prefill + decode.
+"""Serving driver — a thin CLI over the ``repro.serve`` engine.
 
-A minimal but real serving loop:
-  * requests arrive with different prompt lengths; the scheduler packs
-    them into a fixed-batch decode pool (padded prompts, ragged cache
-    lengths via per-row ``pos`` masking);
-  * prefill primes each request's KV cache; decode steps the whole pool
-    one token at a time (greedy);
-  * kernel-level mapping (flash-decode chunks, block sizes) and mesh-level
-    sharding come from the same runtime plan as training.
+The real serving loop lives in ``repro.serve.engine`` (continuous
+batching, bucketed tuned dispatch, paged-KV accounting; see
+docs/SERVING.md).  This module keeps two entry points:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced
+  * ``serve_batch`` — the fixed-mix convenience API (all requests
+    submitted at once, slots = requests): what the system tests and
+    quickstart examples call;
+  * ``main`` — synthetic-traffic CLI: Poisson arrivals through the
+    engine, with the tuner's ``--measure {off,cached,live}`` passthrough
+    so the profiler's measured-cost tuning can refine serving buckets
+    (``cached`` replays recorded traces and is the safe default — no
+    device work on a cache miss, clean fallback on an empty store).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \\
+      --requests 16 --rate 8 --measure cached
 """
 
 from __future__ import annotations
@@ -17,7 +22,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,14 +29,20 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
+from repro.core.mapper import MappingPolicy
 from repro.launch.mesh import make_local_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import build_model
 from repro.runtime import sharding as shd
+from repro.serve import (POOL_FAMILIES, BucketSpec, ServeEngine,
+                         TrafficConfig, drive)
+from repro.tuner import MEASURE_MODES
 
 
 @dataclasses.dataclass
 class ServeStats:
+    """Back-compat summary of one fixed-mix ``serve_batch`` run."""
+
     n_requests: int
     prefill_tokens: int
     decoded_tokens: int
@@ -41,28 +51,25 @@ class ServeStats:
     outputs: list
 
 
-def serve_batch(arch: str, prompts: list[list[int]], *,
-                max_new_tokens: int = 16, reduced: bool = True,
-                mesh=None, params=None, verbose: bool = True) -> ServeStats:
-    cfg = get_config(arch)
-    if reduced:
-        cfg = cfg.reduced()
+def _serve_batch_fixed(cfg, prompts, *, max_new_tokens, mesh, params):
+    """Family-generic fixed-batch loop (the pre-engine path): scalar-pos
+    decode over one padded batch.  Kept for the cache families the
+    ragged pool does not speak yet (ssm/hybrid/encdec/vlm) — all rows
+    step together, but ``last_pos`` still reads each prompt's true final
+    token, so ragged prompts never sample from padding."""
     model = build_model(cfg)
     if mesh is None:
         mesh = make_local_mesh(1, 1)
     b = len(prompts)
     max_prompt = max(len(p) for p in prompts)
     max_len = max_prompt + max_new_tokens + 1
-    shape = ShapeConfig("serve", max_len, b, "decode")
-    plan = shd.resolve_plan(cfg, mesh, shape)
-
+    plan = shd.resolve_plan(cfg, mesh,
+                            ShapeConfig("serve", max_len, b, "decode"))
     if params is None:
         params = model.init(jax.random.key(0))
-
     prefill = jax.jit(make_prefill_step(model, plan, max_len))
     decode = jax.jit(make_decode_step(model, plan))
 
-    # pad prompts LEFT-aligned; ragged handled by per-request lengths
     toks = np.zeros((b, max_prompt), np.int32)
     for i, p in enumerate(prompts):
         toks[i, :len(p)] = p
@@ -73,15 +80,17 @@ def serve_batch(arch: str, prompts: list[list[int]], *,
     if cfg.family == "encdec":
         batch["frames"] = jnp.zeros((b, cfg.encoder_tokens, cfg.d_model),
                                     model.dtype)
+    offset = cfg.prefix_tokens if cfg.family == "vlm" else 0
+    last = jnp.asarray([offset + len(p) - 1 for p in prompts], jnp.int32)
 
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch, last)
+    logits = jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
 
     out = [list(p) for p in prompts]
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(max_new_tokens):
         for i in range(b):
             out[i].append(int(tok[i, 0]))
@@ -89,34 +98,101 @@ def serve_batch(arch: str, prompts: list[list[int]], *,
         lg = logits[:, 0] if logits.ndim == 3 else logits
         tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
     jax.block_until_ready(tok)
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
+    return out, t_prefill, t_decode
 
-    stats = ServeStats(
-        n_requests=b, prefill_tokens=sum(len(p) for p in prompts),
-        decoded_tokens=b * max_new_tokens, prefill_s=t_prefill,
-        decode_s=t_decode, outputs=out)
+
+def serve_batch(arch: str, prompts: list[list[int]], *,
+                max_new_tokens: int = 16, reduced: bool = True,
+                mesh=None, params=None, verbose: bool = True,
+                policy: MappingPolicy | str = MappingPolicy.TUNED,
+                measure: str = "off") -> ServeStats:
+    """Serve a fixed request mix: every prompt admitted at t=0, one slot
+    each, greedy decode to ``max_new_tokens``.  Attention-cache families
+    run on the engine's ragged pool (per-row positions: no request reads
+    another's padding); the other families keep the fixed-batch loop."""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    if cfg.family not in POOL_FAMILIES:
+        outputs, t_prefill, t_decode = _serve_batch_fixed(
+            cfg, prompts, max_new_tokens=max_new_tokens, mesh=mesh,
+            params=params)
+        stats = ServeStats(
+            n_requests=len(prompts),
+            prefill_tokens=sum(len(p) for p in prompts),
+            decoded_tokens=len(prompts) * max_new_tokens,
+            prefill_s=t_prefill, decode_s=t_decode, outputs=outputs)
+    else:
+        max_len = max(len(p) for p in prompts) + max_new_tokens + 1
+        engine = ServeEngine(cfg, slots=len(prompts), max_len=max_len,
+                             mesh=mesh, params=params, policy=policy,
+                             measure=measure, verbose=False)
+        reqs = [engine.submit(p, max_new_tokens=max_new_tokens)
+                for p in prompts]
+        report = engine.run()
+        s = report.summary
+        stats = ServeStats(
+            n_requests=len(prompts),
+            prefill_tokens=sum(len(p) for p in prompts),
+            decoded_tokens=s.output_tokens,
+            prefill_s=s.prefill_s, decode_s=s.decode_s,
+            outputs=[report.outputs[r.rid] for r in reqs])
     if verbose:
-        print(f"[serve] {cfg.name}: {b} reqs, prefill "
-              f"{stats.prefill_tokens} tok in {t_prefill:.2f}s, decoded "
-              f"{stats.decoded_tokens} tok in {t_decode:.2f}s "
-              f"({stats.decoded_tokens / max(t_decode, 1e-9):.1f} tok/s)")
+        print(f"[serve] {cfg.name}: {stats.n_requests} reqs, prefill "
+              f"{stats.prefill_tokens} tok in {stats.prefill_s:.2f}s, decoded "
+              f"{stats.decoded_tokens} tok in {stats.decode_s:.2f}s "
+              f"({stats.decoded_tokens / max(stats.decode_s, 1e-9):.1f} "
+              f"tok/s)")
     return stats
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="smollm-135m")
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="open-loop Poisson arrivals per second")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--mode", choices=("open", "closed"), default="open")
+    ap.add_argument("--bucket-mode",
+                    choices=("pow2", "linear", "exact", "fixed"),
+                    default="pow2")
+    ap.add_argument("--policy", default="tuned",
+                    choices=[p.value for p in MappingPolicy])
+    ap.add_argument("--measure", choices=MEASURE_MODES, default="cached",
+                    help="tuner refinement on bucket misses: cached replays "
+                         "recorded profiler traces (safe default), live "
+                         "measures on-device, off is analytic-only")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
-    rng = np.random.default_rng(0)
+
     cfg = get_config(args.arch)
-    vocab = (cfg.reduced() if not args.full else cfg).vocab_size
-    prompts = [list(rng.integers(1, vocab, size=rng.integers(4, 24)))
-               for _ in range(args.requests)]
-    serve_batch(args.arch, prompts, max_new_tokens=args.max_new,
-                reduced=not args.full)
+    vocab = (cfg if args.full else cfg.reduced()).vocab_size
+    rng = np.random.default_rng(args.seed)
+    lo, hi = 4, max(8, args.max_len - args.max_new - 1)
+    traffic = TrafficConfig(
+        n_requests=args.requests, rate=args.rate, mode=args.mode,
+        prompt_dist=("uniform", lo, min(hi, 48)),
+        output_dist=("uniform", 2, args.max_new),
+        concurrency=args.slots, vocab=vocab,
+        seed=int(rng.integers(1 << 30)))
+    engine = ServeEngine(
+        args.arch, slots=args.slots, max_len=args.max_len,
+        reduced=not args.full,
+        spec=BucketSpec(max_len=args.max_len, mode=args.bucket_mode),
+        policy=args.policy, measure=args.measure, verbose=True)
+    report = drive(engine, traffic)
+    s = report.summary
+    print(f"[serve] ttft p50/p95 {s.ttft_p50_s * 1e3:.1f}/"
+          f"{s.ttft_p95_s * 1e3:.1f} ms, tpot p50 {s.tpot_p50_s * 1e3:.2f} ms, "
+          f"{s.tokens_per_s:.1f} tok/s, util {s.utilization:.2f}, "
+          f"compiles decode={report.compiled_decode_shapes} "
+          f"prefill={report.compiled_prefill_shapes}, "
+          f"router={report.router_stats}")
 
 
 if __name__ == "__main__":

@@ -194,13 +194,19 @@ def abstract_train_state(model: Model, plan: Optional[Plan] = None) -> dict:
 # --------------------------------------------------------------------------- #
 
 
-def make_prefill_step(model: Model, plan: Plan, max_len: int,
+def make_prefill_step(model: Model, plan: Plan, max_len: Optional[int],
                       flags: Optional[dict] = None):
+    """``max_len=None`` pads the cache only to the prompt's own (bucketed)
+    length — the serving engine pads rows to the pool length on insert, so
+    one jitted prefill serves every prompt bucket.  ``last_pos`` (B,)
+    selects each row's true final-token logits for right-padded prompts
+    (defaults to the fixed-batch position -1 behaviour)."""
     ctx = make_ctx(plan)
     ctx.flags.update(flags or {})
 
-    def prefill_step(params, batch):
-        return model.prefill(params, batch, max_len, ctx=ctx)
+    def prefill_step(params, batch, last_pos=None):
+        ml = max_len if max_len is not None else batch["tokens"].shape[1]
+        return model.prefill(params, batch, ml, last_pos=last_pos, ctx=ctx)
 
     return prefill_step
 

@@ -92,10 +92,10 @@ def train(arch: str, *, steps: int = 50, global_batch: int = 8,
                     batch["patches"] = batch["patches"].astype(model.dtype)
                 if cfg.family == "encdec":
                     batch["frames"] = batch["frames"].astype(model.dtype)
-                t0 = time.time()
+                t0 = time.perf_counter()
                 state, metrics = train_step(state, batch)
                 loss = float(metrics["loss"])
-                monitor.record_step({0: time.time() - t0})
+                monitor.record_step({0: time.perf_counter() - t0})
                 losses.append(loss)
                 if verbose and (step % log_every == 0 or step == steps - 1):
                     print(f"  step {step:5d} loss {loss:8.4f} "

@@ -417,11 +417,19 @@ KV_INT8_SCALE = 32.0
 
 def _cache_write(cache, new, pos):
     if cache.dtype == jnp.int8:
-        q = jnp.clip(jnp.round(new.astype(jnp.float32) * KV_INT8_SCALE),
-                     -127, 127).astype(jnp.int8)
-        return jax.lax.dynamic_update_slice_in_dim(cache, q, pos, axis=1)
-    return jax.lax.dynamic_update_slice_in_dim(
-        cache, new.astype(cache.dtype), pos, axis=1)
+        new = jnp.clip(jnp.round(new.astype(jnp.float32) * KV_INT8_SCALE),
+                       -127, 127)
+    new = new.astype(cache.dtype)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 1:
+        # ragged pool (serving): each row writes at its OWN position.  A
+        # one-hot select instead of per-row dynamic slices keeps the write
+        # a single fused op; rows whose pos >= T write nothing (the mask
+        # never fires), so retired slots are inert until re-admitted.
+        t = cache.shape[1]
+        row = jnp.arange(t)[None, :] == pos[:, None]          # (B, T)
+        return jnp.where(row[..., None, None], new, cache)
+    return jax.lax.dynamic_update_slice_in_dim(cache, new, pos, axis=1)
 
 
 def _cache_read(cache, compute_dtype):
@@ -437,14 +445,18 @@ def attention_decode(
     cfg: ModelConfig,
     k_cache: jax.Array,           # (B, T, G, D) — model dtype or int8
     v_cache: jax.Array,
-    pos,                          # scalar current position
+    pos,                          # current position: scalar or (B,) ragged
     *,
     cos=None,
     sin=None,
     window: Optional[int] = None,
     ctx: ShardCtx,
 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
-    """One-token decode; returns (out (B,1,D), updated caches)."""
+    """One-token decode; returns (out (B,1,D), updated caches).
+
+    A vector ``pos`` (B,) drives the ragged serving pool: every row
+    writes its new KV at its own position and masks its own cache
+    length, so mixed-progress requests share one compiled step."""
     b = x.shape[0]
     q, k, v = _project_qkv(params, x, cfg, cos, sin, ctx)
     # write the new kv at position `pos` (quantizing if the cache is int8)

@@ -141,8 +141,13 @@ class Model:
         raise ValueError(f)
 
     def prefill(self, params, batch: dict, max_len: int, *,
-                ctx: ShardCtx = NO_SHARD):
-        """Run the prompt, return (last-token logits, primed cache)."""
+                last_pos=None, ctx: ShardCtx = NO_SHARD):
+        """Run the prompt, return (last-token logits, primed cache).
+
+        ``last_pos`` (B,) selects each row's TRUE final-token logits when
+        prompts are right-padded to a shape bucket (the serving engine's
+        admission path); ``None`` keeps the fixed-batch behaviour of
+        reading position -1."""
         cfg, f = self.cfg, self.cfg.family
         tokens = batch["tokens"]
         b, s = tokens.shape
@@ -181,6 +186,9 @@ class Model:
                      "pos": jnp.int32(s)}
         else:
             raise ValueError(f)
+        if last_pos is not None:
+            idx = jnp.asarray(last_pos, jnp.int32)[:, None, None]
+            return jnp.take_along_axis(logits, idx, axis=1), cache
         return logits[:, -1:], cache
 
     def decode_step(self, params, cache, tokens, *, ctx: ShardCtx = NO_SHARD):

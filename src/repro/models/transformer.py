@@ -273,12 +273,17 @@ def decode_step(
     *,
     ctx: ShardCtx = NO_SHARD,
 ):
-    """One greedy decode step: (logits (B,1,V), updated cache)."""
+    """One greedy decode step: (logits (B,1,V), updated cache).
+
+    ``cache["pos"]`` may be a scalar (every row at the same depth — the
+    fixed-batch loop) or a (B,) vector (the serving pool's ragged rows:
+    per-row rope positions, cache writes, and length masks)."""
     x = embed(params["embed"], tokens)
     x = ctx.p(x, "batch", None, "embed")
     pos = cache["pos"]
-    cos_g, sin_g = rope_tables(pos[None], cfg.head_dim, cfg.rope_theta)
-    cos_l, sin_l = rope_tables(pos[None], cfg.head_dim, LOCAL_ROPE_THETA)
+    rope_pos = pos[:, None] if pos.ndim else pos[None]
+    cos_g, sin_g = rope_tables(rope_pos, cfg.head_dim, cfg.rope_theta)
+    cos_l, sin_l = rope_tables(rope_pos, cfg.head_dim, LOCAL_ROPE_THETA)
     flags = layer_flags(cfg)
 
     def body(x, xs):

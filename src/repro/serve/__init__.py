@@ -1,0 +1,50 @@
+"""repro.serve — continuous-batching serving on the tuned runtime stack.
+
+Layer 6 of the stack (docs/SERVING.md): a serving workload is where
+shapes change at *runtime* — every admission/retirement moves the
+(batch, length) geometry — so the paper's runtime-mapping rule becomes
+the thing that picks each shape bucket's kernel plans:
+
+  ``buckets``    quantize live geometry onto a bounded lattice; route
+                 each bucket through ``tuner.resolve_plan`` (per-bucket
+                 ``WorkloadSignature``, zero-probe warm hits),
+  ``kvcache``    block/slot accounting under the ragged pool arrays,
+  ``scheduler``  FIFO queue + admission control + slot recycling,
+  ``engine``     the prefill/decode interleaving loop itself,
+  ``traffic``    synthetic Poisson workloads (open/closed loop),
+  ``metrics``    TTFT / TPOT / throughput / utilization accounting.
+"""
+
+from repro.serve.buckets import (Bucket, BucketPlan, BucketRouter,
+                                 BucketSpec, RouterStats)
+from repro.serve.engine import POOL_FAMILIES, ServeEngine, ServeReport
+from repro.serve.kvcache import BlockAllocator, KVCachePool, Lease
+from repro.serve.metrics import (RequestRecord, ServeMetrics, ServeSummary,
+                                 percentile)
+from repro.serve.scheduler import ADMISSION_MODES, Request, Scheduler
+from repro.serve.traffic import TrafficConfig, drive, sample_length, synthesize
+
+__all__ = [
+    "ADMISSION_MODES",
+    "BlockAllocator",
+    "Bucket",
+    "BucketPlan",
+    "BucketRouter",
+    "BucketSpec",
+    "KVCachePool",
+    "Lease",
+    "POOL_FAMILIES",
+    "percentile",
+    "Request",
+    "RequestRecord",
+    "RouterStats",
+    "Scheduler",
+    "ServeEngine",
+    "ServeMetrics",
+    "ServeReport",
+    "ServeSummary",
+    "TrafficConfig",
+    "drive",
+    "sample_length",
+    "synthesize",
+]

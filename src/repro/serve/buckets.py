@@ -1,0 +1,230 @@
+"""Shape bucketing: quantize live serving geometry onto a bounded lattice.
+
+A serving workload changes shape every time a request is admitted or
+retired — exactly the runtime variability the paper's mapping rule is
+built for, except that on TPU every *distinct* shape is a compile.  The
+bucketing layer fixes both sides at once:
+
+  * ``BucketSpec`` defines a finite lattice of legal (slots, kv_len)
+    geometries; ``quantize`` rounds any live requirement UP onto it, so
+    the compile set is bounded by the lattice size no matter what the
+    traffic does;
+  * each lattice point gets its own canonical ``WorkloadSignature`` and
+    is routed through ``tuner.resolve_plan`` — the per-bucket kernel
+    mappings (decode-attention cache block, prefill flash tiles) are the
+    paper's runtime decision, memoized in the tuning cache so a warm
+    bucket costs ZERO refine probes (``benchmarks/serve_bench.py`` pins
+    this).
+
+``mode="exact"`` disables quantization (the naive per-shape ablation the
+benchmark beats) and ``mode="fixed"`` collapses the lattice to the single
+max shape (the static-batch ablation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.hw import TpuParams, detect
+from repro.core.mapper import MappingPolicy
+from repro.tuner import (ResolveInfo, TuningCache, WorkloadSignature,
+                         resolve_plan, workload_signature)
+
+__all__ = ["BucketSpec", "Bucket", "BucketPlan", "RouterStats",
+           "BucketRouter"]
+
+BUCKET_MODES = ("pow2", "linear", "exact", "fixed")
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """The length lattice serving shapes are quantized onto.
+
+    ``pow2``   powers of two in [min_len, max_len] — O(log) buckets;
+    ``linear`` multiples of ``quantum`` — finer, O(max/quantum) buckets;
+    ``exact``  identity (every shape its own bucket; unbounded compiles);
+    ``fixed``  everything maps to ``max_len`` (one max-shape bucket).
+    """
+
+    min_len: int = 32
+    max_len: int = 4096
+    mode: str = "pow2"
+    quantum: int = 64
+
+    def __post_init__(self):
+        if self.mode not in BUCKET_MODES:
+            raise ValueError(f"mode must be one of {BUCKET_MODES}, "
+                             f"got {self.mode!r}")
+        if not 0 < self.min_len <= self.max_len:
+            raise ValueError(f"need 0 < min_len <= max_len, got "
+                             f"{self.min_len}/{self.max_len}")
+        if self.mode == "pow2":
+            # keep the lattice self-consistent: the floor itself must be
+            # a lattice point (frozen dataclass: normalize in place)
+            object.__setattr__(self, "min_len",
+                               min(self.max_len, _next_pow2(self.min_len)))
+
+    def quantize(self, n: int) -> int:
+        """Smallest lattice length covering ``n`` tokens."""
+        if n > self.max_len:
+            raise ValueError(f"length {n} exceeds the lattice cap "
+                             f"{self.max_len}")
+        n = max(n, 1)
+        if self.mode == "fixed":
+            return self.max_len
+        if self.mode == "exact":
+            return n
+        if self.mode == "pow2":
+            return min(self.max_len, _next_pow2(max(n, self.min_len)))
+        q = self.quantum
+        first = -(-self.min_len // q) * q      # smallest lattice multiple
+        return min(self.max_len, max(first, -(-n // q) * q))
+
+    def lattice(self) -> tuple[int, ...]:
+        """Every length this spec can produce (exact mode: unbounded —
+        returns () as the honest answer)."""
+        if self.mode == "fixed":
+            return (self.max_len,)
+        if self.mode == "exact":
+            return ()
+        if self.mode == "pow2":
+            n = self.min_len
+        else:
+            n = -(-self.min_len // self.quantum) * self.quantum
+        out = []
+        while n < self.max_len:
+            out.append(n)
+            n = n * 2 if self.mode == "pow2" else n + self.quantum
+        out.append(self.max_len)
+        return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One lattice point: a decode-pool geometry."""
+
+    slots: int
+    kv_len: int
+
+    def covers(self, batch: int, need_len: int) -> bool:
+        return batch <= self.slots and need_len <= self.kv_len
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Resolved per-bucket kernel mappings + their provenance."""
+
+    bucket: Bucket
+    sig: WorkloadSignature
+    decode_block: int                  # decode_attention cache block
+    decode_info: ResolveInfo
+    prefill_blocks: Optional[tuple]    # flash (block_q, block_k) | None
+    prefill_info: Optional[ResolveInfo]
+
+    @property
+    def probes(self) -> int:
+        return self.decode_info.probes + (
+            self.prefill_info.probes if self.prefill_info else 0)
+
+
+@dataclasses.dataclass
+class RouterStats:
+    """Per-router dispatch accounting (serve_bench asserts on these)."""
+
+    cold: int = 0            # resolutions that consulted the tuner
+    warm: int = 0            # served from the router's own plan table
+    probes: int = 0          # refine probes spent across all resolutions
+    cache_hits: int = 0      # tuner resolutions answered by the TuningCache
+
+
+class BucketRouter:
+    """Maps live (batch, need_len) geometry to tuned per-bucket plans.
+
+    The router is the serving engine's window into the tuner: it owns the
+    lattice, builds each bucket's ``WorkloadSignature``, and resolves the
+    bucket's kernel mappings through ``tuner.resolve_plan`` — so the
+    decision flow (Eq. 1 seed -> cache -> refine -> memoize) and the
+    zero-probe warm-hit guarantee are inherited, not reimplemented.
+    """
+
+    def __init__(self, cfg: ModelConfig, spec: BucketSpec, *,
+                 slots: int, hw: Optional[TpuParams] = None,
+                 policy: MappingPolicy | str = MappingPolicy.TUNED,
+                 cache: Optional[TuningCache] = None,
+                 measure: str = "off", store: Optional[Any] = None):
+        self.cfg = cfg
+        self.spec = spec
+        self.slots = slots
+        self.hw = hw if hw is not None else detect()
+        self.policy = MappingPolicy(policy)
+        self.cache = cache
+        self.measure = measure
+        self.store = store
+        self.stats = RouterStats()
+        self._plans: dict[str, BucketPlan] = {}
+
+    # -- lattice ----------------------------------------------------------
+
+    def bucket(self, need_len: int) -> Bucket:
+        return Bucket(self.slots, self.spec.quantize(need_len))
+
+    def quantize_prompt(self, prompt_len: int) -> int:
+        return self.spec.quantize(prompt_len)
+
+    # -- resolution -------------------------------------------------------
+
+    def signature(self, bucket: Bucket) -> WorkloadSignature:
+        """The bucket's canonical identity in the tuning namespace."""
+        return workload_signature(
+            "serve_decode",
+            shapes=[(bucket.slots, bucket.kv_len)],
+            dtypes=[self.cfg.dtype],
+            policy=self.policy,
+            kv_heads=max(self.cfg.num_kv_heads, 1),
+            head_dim=self.cfg.head_dim,
+            layers=self.cfg.num_layers)
+
+    def _resolve_kernel(self, kernel: str, desc: dict):
+        kw = {}
+        if self.measure != "off":
+            kw = dict(measure=self.measure, store=self.store)
+        plan, info = resolve_plan(kernel, self.hw, self.policy, desc,
+                                  self.cache, **kw)
+        self.stats.probes += info.probes
+        if info.source == "cache":
+            self.stats.cache_hits += 1
+        return plan, info
+
+    def resolve(self, bucket: Bucket) -> BucketPlan:
+        """Per-bucket kernel mappings; memoized on the bucket signature."""
+        sig = self.signature(bucket)
+        hit = self._plans.get(sig.key)
+        if hit is not None:
+            self.stats.warm += 1
+            return hit
+        self.stats.cold += 1
+        db = 2 if self.cfg.dtype == "bfloat16" else 4
+        dblock, dinfo = self._resolve_kernel("decode_attention", {
+            "s": bucket.kv_len, "d": self.cfg.head_dim,
+            "dtype": self.cfg.dtype, "dtype_bytes": db})
+        pplan, pinfo = None, None
+        if not self.cfg.is_attention_free:
+            fplan, pinfo = self._resolve_kernel("flash_attention", {
+                "seq_q": bucket.kv_len, "seq_kv": bucket.kv_len,
+                "head_dim": self.cfg.head_dim, "dtype": self.cfg.dtype,
+                "dtype_bytes": db, "causal": True})
+            pplan = (int(fplan.block_q), int(fplan.block_k))
+        plan = BucketPlan(bucket=bucket, sig=sig, decode_block=int(dblock),
+                          decode_info=dinfo, prefill_blocks=pplan,
+                          prefill_info=pinfo)
+        self._plans[sig.key] = plan
+        return plan

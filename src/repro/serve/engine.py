@@ -1,0 +1,342 @@
+"""Continuous-batching serving engine.
+
+The engine interleaves prefill and decode over a live request pool:
+
+  * admitted requests prefill individually (prompt padded to its length
+    bucket, true-last-token logits via ``Model.prefill(last_pos=...)``)
+    and their primed KV rows are written into the pool at the leased
+    slot;
+  * the whole pool decodes one token per tick through ONE compiled step
+    whose rows are ragged — every row carries its own position
+    (``cache["pos"]`` is a vector; see ``models.attention``), so a slot
+    that just admitted a 7-token prompt coexists with one 900 tokens
+    into its answer;
+  * finished requests retire mid-decode: their slot + KV blocks recycle
+    to the queue head on the next tick (``scheduler``), so steady-state
+    utilization stays near 1 while shapes — and therefore the tuned
+    kernel mappings — are managed by the bucket lattice (``buckets``).
+
+Geometry changes (pool-length bucket steps) are the runtime events the
+paper's thesis is about: each one re-routes through ``tuner.resolve_plan``
+for the new bucket's kernel plans and triggers at most one new XLA
+compile, bounded by the lattice.
+
+The engine's clock is injectable; when the pool is idle it fast-forwards
+to the next synthetic arrival, so open-loop traffic with sparse arrivals
+never sleeps the process (virtual-time simulation, standard for
+device-free benchmarks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig, get_config
+from repro.core.hw import TpuParams
+from repro.core.mapper import MappingPolicy
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import build_model
+from repro.runtime import sharding as shd
+from repro.serve.buckets import BucketRouter, BucketSpec
+from repro.serve.kvcache import KVCachePool
+from repro.serve.metrics import ServeMetrics, ServeSummary
+from repro.serve.scheduler import Request, Scheduler
+from repro.tuner import TuningCache
+
+__all__ = ["ServeEngine", "ServeReport"]
+
+#: families whose decode cache is the {"k", "v", "pos"} attention layout
+#: the ragged pool understands.  SSM/hybrid/enc-dec caches have different
+#: state shapes; growing the pool to them is tracked in ROADMAP.md.
+POOL_FAMILIES = ("dense", "moe")
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Everything one engine run produced."""
+
+    summary: ServeSummary
+    outputs: dict[int, list[int]]          # rid -> prompt + generated
+    completed: list[Request]
+    rejected: list[Request]
+    router_stats: dict
+    compiled_decode_shapes: int
+    compiled_prefill_shapes: int
+    pool_growths: int
+
+
+class ServeEngine:
+    """Continuous-batching loop over a bucketed, tuned decode pool.
+
+    ``arch`` is a registered config name or a ready ``ModelConfig``.
+    ``reduced`` applies only to names — a ``ModelConfig`` is served
+    exactly as given (callers shrinking a config do it explicitly, e.g.
+    ``get_config(n).reduced()``)."""
+
+    def __init__(self, arch: str | ModelConfig, *,
+                 slots: int = 4,
+                 max_len: int = 256,
+                 reduced: bool = True,
+                 spec: Optional[BucketSpec] = None,
+                 admission: str = "continuous",
+                 policy: MappingPolicy | str = MappingPolicy.TUNED,
+                 measure: str = "off",
+                 store: Optional[Any] = None,
+                 tuning_cache: Optional[TuningCache] = None,
+                 hw: Optional[TpuParams] = None,
+                 mesh=None,
+                 params=None,
+                 block_size: int = 16,
+                 total_blocks: Optional[int] = None,
+                 eos_id: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 verbose: bool = False):
+        cfg = get_config(arch) if isinstance(arch, str) else arch
+        if isinstance(arch, str) and reduced:
+            cfg = cfg.reduced()
+        if cfg.family not in POOL_FAMILIES:
+            raise NotImplementedError(
+                f"ragged pool serving supports families {POOL_FAMILIES}; "
+                f"{cfg.name} is {cfg.family!r}")
+        self.cfg = cfg
+        self.slots = slots
+        self.spec = spec or BucketSpec(max_len=max_len,
+                                       min_len=min(32, max_len))
+        if self.spec.max_len > max_len:
+            self.spec = dataclasses.replace(
+                self.spec, max_len=max_len,
+                min_len=min(self.spec.min_len, max_len))
+        self.eos_id = eos_id
+        self.verbose = verbose
+        self._clock = clock
+        self._t0: Optional[float] = None
+        self._skew = 0.0
+
+        self.model = build_model(cfg)
+        self.mesh = mesh if mesh is not None else make_local_mesh(1, 1)
+        shape = ShapeConfig("serve", self.spec.max_len, slots, "decode")
+        self.plan = shd.resolve_plan(cfg, self.mesh, shape)
+        self.params = params if params is not None \
+            else self.model.init(jax.random.key(0))
+
+        self.router = BucketRouter(cfg, self.spec, slots=slots, hw=hw,
+                                   policy=policy, cache=tuning_cache,
+                                   measure=measure, store=store)
+        self._block_size = block_size
+        self._total_blocks = total_blocks
+        self._admission = admission
+        kv0 = self.spec.quantize(1)
+        self.pool = KVCachePool(slots, kv0, block_size=block_size,
+                                total_blocks=total_blocks,
+                                max_len=self.spec.max_len)
+        self.scheduler = Scheduler(self.pool, mode=admission)
+        self.metrics = ServeMetrics()
+        self.outputs: dict[int, list[int]] = {}
+
+        self._prefill = jax.jit(make_prefill_step(self.model, self.plan, None))
+        self._decode = jax.jit(make_decode_step(self.model, self.plan))
+        self._cache = self._fresh_cache(kv0)
+        self._tokens = np.zeros((slots, 1), np.int32)
+        self.compiled_decode_shapes: set[tuple[int, int]] = set()
+        self.compiled_prefill_shapes: set[int] = set()
+        self.pool_growths = 0
+
+    def reset(self) -> None:
+        """Clear traffic state but KEEP the warm machinery — jitted
+        steps, resolved bucket plans, the tuning cache, and the
+        compile-shape history.  Callers reuse one engine across traffic
+        mixes; benchmarks use it to separate steady-state behaviour from
+        cold-start compiles."""
+        kv0 = self.spec.quantize(1)
+        self.pool = KVCachePool(self.slots, kv0,
+                                block_size=self._block_size,
+                                total_blocks=self._total_blocks,
+                                max_len=self.spec.max_len)
+        self.scheduler = Scheduler(self.pool, mode=self._admission)
+        self.metrics = ServeMetrics()
+        self.outputs = {}
+        self._cache = self._fresh_cache(kv0)
+        self._tokens = np.zeros((self.slots, 1), np.int32)
+        self.pool_growths = 0
+        self._t0 = None
+        self._skew = 0.0
+
+    # -- time -------------------------------------------------------------
+
+    def _now(self) -> float:
+        if self._t0 is None:
+            self._t0 = self._clock()
+        return self._clock() - self._t0 + self._skew
+
+    def _fast_forward(self, to_t: float) -> None:
+        now = self._now()
+        if to_t > now:
+            self._skew += to_t - now
+
+    # -- pool plumbing ----------------------------------------------------
+
+    def _fresh_cache(self, kv_len: int) -> dict:
+        cache = self.model.init_cache(self.slots, kv_len,
+                                      expand_kv=self.plan.expand_kv,
+                                      cache_dtype=None)
+        cache["pos"] = jnp.zeros((self.slots,), jnp.int32)
+        return cache
+
+    def _grow_pool(self, new_len: int) -> None:
+        pad = new_len - self.pool.kv_len
+        assert pad > 0
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+        self._cache = {
+            "k": jnp.pad(self._cache["k"], widths),
+            "v": jnp.pad(self._cache["v"], widths),
+            "pos": self._cache["pos"],
+        }
+        self.pool.grow(new_len)
+        self.pool_growths += 1
+        if self.verbose:
+            print(f"[serve] pool -> ({self.slots}, {new_len})")
+
+    # -- intake -----------------------------------------------------------
+
+    def submit(self, req: Request | list[int], *,
+               max_new_tokens: int = 16, arrival: float = 0.0) -> Request:
+        """Queue a request (a ``Request`` or a raw prompt token list)."""
+        if not isinstance(req, Request):
+            req = Request(prompt=list(req), max_new_tokens=max_new_tokens,
+                          arrival=arrival)
+        req.prompt = [int(t) for t in req.prompt]
+        if req.prompt_len < 1:
+            raise ValueError("empty prompt")
+        # never-seatable rejection (projected length over the pool's max
+        # bucket) lives in ONE place: the scheduler; it marks
+        # ``req.rejected`` so callers (traffic.drive) can react
+        if self.scheduler.submit(req):
+            self.metrics.on_submit(req.rid, req.arrival, req.prompt_len)
+        return req
+
+    # -- admission + prefill ----------------------------------------------
+
+    def _admit(self, req: Request, now: float) -> None:
+        pb = self.router.quantize_prompt(req.prompt_len)
+        toks = np.zeros((1, pb), np.int32)
+        toks[0, :req.prompt_len] = req.prompt
+        last = jnp.asarray([req.prompt_len - 1], jnp.int32)
+        self.compiled_prefill_shapes.add(pb)
+        t0 = time.perf_counter()
+        logits, rcache = self._prefill(self.params,
+                                       {"tokens": jnp.asarray(toks)}, last)
+        logits = jax.block_until_ready(logits)
+        self.metrics.add_prefill_time(time.perf_counter() - t0)
+
+        slot = req.slot
+        pad = self.pool.kv_len - rcache["k"].shape[2]
+        assert pad >= 0, "prompt bucket outgrew the pool row"
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        self._cache["k"] = self._cache["k"].at[:, slot].set(
+            jnp.pad(rcache["k"][:, 0], widths))
+        self._cache["v"] = self._cache["v"].at[:, slot].set(
+            jnp.pad(rcache["v"][:, 0], widths))
+        self._cache["pos"] = self._cache["pos"].at[slot].set(req.prompt_len)
+
+        first = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(first)
+        self._tokens[slot, 0] = first
+        t = self._now()
+        self.metrics.on_admit(req.rid, now)
+        self.metrics.on_first_token(req.rid, t)
+
+    # -- decode -----------------------------------------------------------
+
+    def _decode_tick(self) -> None:
+        self.compiled_decode_shapes.add((self.slots, self.pool.kv_len))
+        t0 = time.perf_counter()
+        logits, self._cache = self._decode(self.params, dict(self._cache),
+                                           jnp.asarray(self._tokens))
+        logits = jax.block_until_ready(logits)
+        self.metrics.add_decode_time(time.perf_counter() - t0)
+        lg = logits[:, 0] if logits.ndim == 3 else logits
+        nxt = np.asarray(jnp.argmax(lg, axis=-1), np.int32)
+        live = self.scheduler.live_by_slot()
+        for slot, req in live.items():
+            if not req.done:
+                req.generated.append(int(nxt[slot]))
+                self._tokens[slot, 0] = int(nxt[slot])
+        self.metrics.on_step(self._now(), len(live), self.slots)
+
+    # -- main loop --------------------------------------------------------
+
+    def _retire_finished(self, on_complete) -> None:
+        now = self._now()
+        for req in self.scheduler.live:
+            eos = self.eos_id is not None and req.generated \
+                and req.generated[-1] == self.eos_id
+            if req.done or eos:
+                self.scheduler.finish(req)
+                self.outputs[req.rid] = list(req.prompt) + list(req.generated)
+                self.metrics.on_done(req.rid, now, len(req.generated))
+                if on_complete is not None:
+                    on_complete(req, now)
+
+    def _admit_ready(self) -> None:
+        now = self._now()
+        self.scheduler.poll(now)
+        need = self.scheduler.peek_need_len()
+        if need is not None:
+            target = self.spec.quantize(need)
+            if target > self.pool.kv_len:
+                self._grow_pool(target)
+        for req in self.scheduler.admissible():
+            # resolve the bucket's tuned kernel plans BEFORE the request
+            # joins the pool — the runtime mapping decision of the paper,
+            # warm buckets answered by the tuning cache with zero probes
+            self.router.resolve(self.router.bucket(self.pool.kv_len))
+            self._admit(req, now)
+
+    def run(self, *, on_complete=None,
+            max_steps: Optional[int] = None) -> ServeReport:
+        """Drain the queue; returns the run's ``ServeReport``."""
+        steps = 0
+        while not self.scheduler.idle:
+            self._admit_ready()
+            if self.scheduler.live:
+                self._decode_tick()
+                self._retire_finished(on_complete)
+            else:
+                nxt = self.scheduler.next_arrival
+                if nxt is not None:
+                    self._fast_forward(nxt)    # idle: jump to next arrival
+                elif self.scheduler.backlog:
+                    # queue head can never be seated (block budget): shed
+                    # it rather than livelock — admission control's floor
+                    self.scheduler.shed_head()
+                else:
+                    break
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return self.report()
+
+    def report(self) -> ServeReport:
+        s = self.metrics.summary()
+        if self.verbose:
+            print(f"[serve] {self.cfg.name}: {s.n_completed}/{s.n_requests} "
+                  f"done, {s.output_tokens} tok @ {s.tokens_per_s:.1f} tok/s, "
+                  f"ttft p50 {s.ttft_p50_s * 1e3:.1f}ms, util "
+                  f"{s.utilization:.2f}")
+        return ServeReport(
+            summary=s,
+            outputs=dict(self.outputs),
+            completed=list(self.scheduler.completed),
+            rejected=list(self.scheduler.rejected),
+            router_stats=dataclasses.asdict(self.router.stats),
+            compiled_decode_shapes=len(self.compiled_decode_shapes),
+            compiled_prefill_shapes=len(self.compiled_prefill_shapes),
+            pool_growths=self.pool_growths,
+        )

@@ -1,0 +1,219 @@
+"""Block/paged KV-cache accounting for the serving pool.
+
+The engine's physical cache is the model stack's dense (L, slots, T, G,
+hd) arrays with a per-row ``pos`` vector — ragged cache lengths are
+handled by per-row position masking inside ``models.attention`` (each
+row writes at its own position and masks its own length), so a short
+request never pays attention cost for the pool's max length.
+
+What lives here is the *management* layer those arrays sit under:
+
+  * ``BlockAllocator`` — a shared pool of fixed-size KV blocks.  Every
+    admitted request acquires enough blocks to cover its projected
+    length and releases them on retirement.  Blocks are the admission
+    currency: the pool may be provisioned with fewer blocks than
+    ``slots * blocks_per_row`` (oversubscription control), and the
+    allocator's ownership map is the aliasing invariant the property
+    tests hammer — a block belongs to at most one live request, ever.
+  * ``KVCachePool`` — slot bookkeeping on top: free-slot tracking,
+    admission (slot AND blocks, atomically), retirement, and pool
+    growth when the length bucket steps up.
+
+Physical paging (scatter-indexed block tables inside the kernels) is
+intentionally out of scope: rows stay slot-contiguous so the dense
+model caches keep working, while admission/recycling semantics are the
+real paged-KV ones.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["BlockAllocator", "KVCachePool", "Lease"]
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class BlockAllocator:
+    """Fixed pool of KV blocks with per-request ownership tracking."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks <= 0 or block_size <= 0:
+            raise ValueError("num_blocks and block_size must be positive")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: list[int] = list(range(num_blocks - 1, -1, -1))
+        self._owner: dict[int, int] = {}          # block -> rid
+        self._held: dict[int, list[int]] = {}     # rid -> blocks
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, tokens: int) -> int:
+        return ceil_div(max(tokens, 1), self.block_size)
+
+    def can_alloc(self, tokens: int) -> bool:
+        return self.blocks_for(tokens) <= len(self._free)
+
+    def alloc(self, rid: int, tokens: int) -> list[int]:
+        """Acquire blocks covering ``tokens`` for request ``rid``."""
+        if rid in self._held:
+            raise ValueError(f"request {rid} already holds blocks")
+        n = self.blocks_for(tokens)
+        if n > len(self._free):
+            raise MemoryError(f"need {n} blocks, {len(self._free)} free")
+        got = [self._free.pop() for _ in range(n)]
+        for b in got:
+            self._owner[b] = rid
+        self._held[rid] = got
+        return list(got)
+
+    def release(self, rid: int) -> list[int]:
+        """Return ``rid``'s blocks to the pool (idempotent-unsafe: a
+        double release is a bug and raises)."""
+        blocks = self._held.pop(rid)
+        for b in blocks:
+            del self._owner[b]
+        self._free.extend(blocks)
+        return blocks
+
+    def holders(self) -> dict[int, list[int]]:
+        return {r: list(bs) for r, bs in self._held.items()}
+
+    def add_blocks(self, n: int) -> None:
+        """Grow the pool (backing a pool-length bucket step)."""
+        if n < 0:
+            raise ValueError("cannot remove blocks from a live pool")
+        first = self.num_blocks
+        self.num_blocks += n
+        self._free.extend(range(first, first + n))
+
+    def check(self) -> None:
+        """Conservation + exclusivity invariants (property-tested)."""
+        held = [b for bs in self._held.values() for b in bs]
+        assert len(held) == len(set(held)), "block aliased by two requests"
+        assert not set(held) & set(self._free), "held block also free"
+        assert len(held) + len(self._free) == self.num_blocks, "blocks lost"
+        for r, bs in self._held.items():
+            for b in bs:
+                assert self._owner[b] == r, "ownership map out of sync"
+
+
+@dataclasses.dataclass
+class Lease:
+    """What one live request holds: a slot row + its KV blocks."""
+
+    rid: int
+    slot: int
+    blocks: list[int]
+    projected_len: int
+
+
+class KVCachePool:
+    """Slot + block bookkeeping for the engine's decode pool."""
+
+    def __init__(self, slots: int, kv_len: int, *, block_size: int = 16,
+                 total_blocks: Optional[int] = None,
+                 max_len: Optional[int] = None):
+        if slots <= 0:
+            raise ValueError("need at least one slot")
+        self.slots = slots
+        self.kv_len = kv_len
+        self.max_len = max_len if max_len is not None else kv_len
+        if self.max_len < kv_len:
+            raise ValueError("max_len below the initial row length")
+        self.block_size = block_size
+        if total_blocks is None:
+            total_blocks = slots * ceil_div(kv_len, block_size)
+        self.allocator = BlockAllocator(total_blocks, block_size)
+        self._free_slots: list[int] = list(range(slots - 1, -1, -1))
+        self._leases: dict[int, Lease] = {}       # rid -> Lease
+        self._by_slot: dict[int, int] = {}        # slot -> rid
+
+    # -- capacity ---------------------------------------------------------
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def live(self) -> int:
+        return len(self._leases)
+
+    def fits(self, projected_len: int) -> bool:
+        """Admission predicate: a free slot, enough blocks, and a row
+        long enough RIGHT NOW.  The row check matters beyond the queue
+        head: a later, longer request must wait for the pool to grow on
+        ITS turn at the head, not slip into rows that would silently
+        truncate its cache."""
+        return (bool(self._free_slots)
+                and projected_len <= self.kv_len
+                and self.allocator.can_alloc(projected_len))
+
+    def _require_row(self, projected_len: int) -> None:
+        if projected_len > self.kv_len:
+            raise MemoryError(f"row too short: projected {projected_len} "
+                              f"> kv_len {self.kv_len}")
+
+    # -- admission / retirement ------------------------------------------
+
+    def admit(self, rid: int, projected_len: int) -> Lease:
+        if not self._free_slots:
+            raise MemoryError("no free slot")
+        self._require_row(projected_len)
+        blocks = self.allocator.alloc(rid, projected_len)  # raises if short
+        slot = self._free_slots.pop()
+        lease = Lease(rid=rid, slot=slot, blocks=blocks,
+                      projected_len=projected_len)
+        self._leases[rid] = lease
+        self._by_slot[slot] = rid
+        return lease
+
+    def retire(self, rid: int) -> Lease:
+        lease = self._leases.pop(rid)
+        self.allocator.release(rid)
+        del self._by_slot[lease.slot]
+        self._free_slots.append(lease.slot)
+        return lease
+
+    def lease(self, rid: int) -> Lease:
+        return self._leases[rid]
+
+    def slot_owner(self, slot: int) -> Optional[int]:
+        return self._by_slot.get(slot)
+
+    def grow(self, new_len: int, extra_blocks: Optional[int] = None) -> None:
+        """Step the row length up to the next bucket.  Live leases keep
+        their blocks (their projected length did not change); the
+        allocator gains the blocks backing the new tail capacity."""
+        if new_len < self.kv_len:
+            raise ValueError("pool never shrinks mid-flight")
+        if new_len > self.max_len:
+            raise ValueError(f"growth past the pool cap "
+                             f"({new_len} > {self.max_len})")
+        if new_len == self.kv_len:
+            return
+        if extra_blocks is None:
+            extra_blocks = self.slots * (
+                ceil_div(new_len, self.block_size)
+                - ceil_div(self.kv_len, self.block_size))
+        self.allocator.add_blocks(extra_blocks)
+        self.kv_len = new_len
+
+    def check(self) -> None:
+        """Pool-level invariants on top of the allocator's."""
+        self.allocator.check()
+        slots_held = [l.slot for l in self._leases.values()]
+        assert len(slots_held) == len(set(slots_held)), "slot double-booked"
+        assert not set(slots_held) & set(self._free_slots), \
+            "live slot also free"
+        assert len(slots_held) + len(self._free_slots) == self.slots, \
+            "slots lost"
+        for rid, lease in self._leases.items():
+            assert self._by_slot[lease.slot] == rid
+            assert lease.projected_len <= self.kv_len, \
+                "lease outgrew the pool row"

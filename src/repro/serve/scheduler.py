@@ -1,0 +1,172 @@
+"""Request queue, admission control, and slot recycling.
+
+The scheduler is deliberately jax-free: it moves ``Request`` objects
+between four states —
+
+    submitted (future arrival) -> ready (queued) -> live (holds a
+    KVCachePool lease) -> done
+
+— under a strict FIFO admission rule: only the HEAD of the ready queue
+is ever considered, and it is admitted the moment the pool can seat it
+(a free slot + enough KV blocks).  Because no request can be admitted
+past a waiting earlier one, a request can starve only if the pool can
+never seat it at all — and those are rejected at submission time
+(``projected_len`` over the engine's max bucket).  The property tests in
+``tests/test_serve.py`` drive random traffic through this loop and
+assert completion of every admitted request.
+
+Two admission modes:
+
+  ``continuous``  recycle slots mid-decode — a finished request frees
+                  its lease immediately and the queue head takes it on
+                  the next tick (the tentpole behaviour);
+  ``gang``        a new batch is admitted only when the pool is EMPTY —
+                  the static fixed-batch baseline serve_bench compares
+                  against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Optional
+
+from repro.serve.kvcache import KVCachePool
+
+__all__ = ["Request", "Scheduler", "ADMISSION_MODES"]
+
+ADMISSION_MODES = ("continuous", "gang")
+
+_rid_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request plus its runtime bookkeeping."""
+
+    prompt: list[int]
+    max_new_tokens: int
+    arrival: float = 0.0
+    rid: int = dataclasses.field(default_factory=lambda: next(_rid_counter))
+
+    # runtime state (owned by scheduler/engine)
+    slot: Optional[int] = None
+    generated: list[int] = dataclasses.field(default_factory=list)
+    rejected: bool = False
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def projected_len(self) -> int:
+        """KV positions the request can ever occupy: the prompt plus one
+        slot per generated token (the last token is never written back)."""
+        return self.prompt_len + self.max_new_tokens
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class Scheduler:
+    """FIFO admission + slot recycling over a ``KVCachePool``."""
+
+    def __init__(self, pool: KVCachePool, *, mode: str = "continuous",
+                 max_queue: Optional[int] = None):
+        if mode not in ADMISSION_MODES:
+            raise ValueError(f"mode must be one of {ADMISSION_MODES}, "
+                             f"got {mode!r}")
+        self.pool = pool
+        self.mode = mode
+        self.max_queue = max_queue
+        self._future: deque[Request] = deque()    # submitted, not arrived
+        self._ready: deque[Request] = deque()     # arrived, waiting
+        self._live: dict[int, Request] = {}
+        self.completed: list[Request] = []
+        self.rejected: list[Request] = []
+
+    # -- intake -----------------------------------------------------------
+
+    def submit(self, req: Request) -> bool:
+        """Accept a request for future admission.  Requests that could
+        NEVER be seated (projected length beyond the pool's maximum row
+        length, or a full bounded queue) are rejected now rather than
+        starved later."""
+        if req.projected_len > self.pool.max_len:
+            req.rejected = True
+            self.rejected.append(req)
+            return False
+        if self.max_queue is not None and self.backlog >= self.max_queue:
+            req.rejected = True
+            self.rejected.append(req)
+            return False
+        self._future.append(req)
+        return True
+
+    def poll(self, now: float) -> None:
+        """Move arrived requests into the ready queue, preserving the
+        arrival order (the submit order is the arrival order: traffic
+        generators emit sorted timelines)."""
+        while self._future and self._future[0].arrival <= now:
+            self._ready.append(self._future.popleft())
+
+    # -- admission --------------------------------------------------------
+
+    def admissible(self) -> list[Request]:
+        """Pop every request admission can seat RIGHT NOW, strictly from
+        the queue head.  Callers prefill + lease each returned request."""
+        if self.mode == "gang" and self._live:
+            return []
+        out = []
+        while self._ready and self.pool.fits(self._ready[0].projected_len):
+            req = self._ready.popleft()
+            lease = self.pool.admit(req.rid, req.projected_len)
+            req.slot = lease.slot
+            self._live[req.rid] = req
+            out.append(req)
+        return out
+
+    def finish(self, req: Request) -> None:
+        """Retire a completed request: free its slot + blocks for the
+        queue head (continuous mode recycles mid-decode)."""
+        del self._live[req.rid]
+        self.pool.retire(req.rid)
+        req.slot = None
+        self.completed.append(req)
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def live(self) -> list[Request]:
+        return list(self._live.values())
+
+    def live_by_slot(self) -> dict[int, Request]:
+        return {r.slot: r for r in self._live.values()}
+
+    @property
+    def backlog(self) -> int:
+        return len(self._future) + len(self._ready)
+
+    @property
+    def next_arrival(self) -> Optional[float]:
+        return self._future[0].arrival if self._future else None
+
+    @property
+    def idle(self) -> bool:
+        return not (self._future or self._ready or self._live)
+
+    def peek_need_len(self) -> Optional[int]:
+        """Projected length of the queue head (pool-growth decisions)."""
+        return self._ready[0].projected_len if self._ready else None
+
+    def shed_head(self) -> Optional[Request]:
+        """Drop the queue head into ``rejected`` — the engine's last
+        resort when an empty pool still cannot seat it (block budget)."""
+        if not self._ready:
+            return None
+        req = self._ready.popleft()
+        req.rejected = True
+        self.rejected.append(req)
+        return req
