@@ -74,6 +74,35 @@ def run(print_fn=print):
             rows.append((f"{name}[{pol.value}]", us,
                          f"sim_cycles={sim.cycles};lws={sim.lws};ok={ok}"))
             assert ok, (name, pol)
+
+    # decode_attention: the serving decode sweep, tracked per policy so
+    # the tuned-vs-default block gap is visible alongside the other
+    # Pallas kernels (the tuned block is what serve threads into the
+    # executed decode step — see serve/buckets + models/attention)
+    from repro.kernels.decode_attention import plan_cache_block
+    from repro.tuner import TuningCache, resolve_plan
+
+    dq = jax.random.normal(key, (64,), jnp.float32)
+    dk = jax.random.normal(jax.random.key(4), (1024, 64), jnp.float32)
+    dv = jax.random.normal(jax.random.key(5), (1024, 64), jnp.float32)
+    dlen = 900
+    d_expected = np.asarray(ref.decode_attention(dq, dk, dv, dlen))
+    d_desc = {"s": 1024, "d": 64, "dtype": "float32", "dtype_bytes": 4}
+    dcache = TuningCache(path=None)
+    for pol in MappingPolicy:
+        fn = lambda p: ops.decode_attention(dq, dk, dv, dlen, policy=p)
+        got = np.asarray(fn(pol))
+        ok = np.allclose(got, d_expected, rtol=1e-3, atol=1e-3)
+        us = _time(fn, pol)
+        if pol is MappingPolicy.TUNED:
+            block, info = resolve_plan("decode_attention", HW, pol,
+                                       d_desc, dcache)
+            derived = f"block_s={block};probes={info.probes};ok={ok}"
+        else:
+            block = plan_cache_block(1024, 64, HW, pol, 4)
+            derived = f"block_s={block};ok={ok}"
+        rows.append((f"decode_attention[{pol.value}]", us, derived))
+        assert ok, ("decode_attention", pol)
     ops.set_force_mode("auto")
 
     # mapper decisions for the record

@@ -1,5 +1,7 @@
 """Serving benchmark: shape-bucketed tuned dispatch vs the naive and
-static alternatives — device-free (CPU, reduced model), self-asserting.
+static alternatives — device-free (CPU, reduced model), self-asserting —
+plus a family matrix proving every CacheAdapter family rides the ragged
+pool (zero fixed-batch fallbacks: that code path no longer exists).
 
 Three engines serve IDENTICAL synthetic traffic (Poisson arrivals,
 ragged prompt/output lengths):
@@ -24,7 +26,11 @@ Acceptance (asserted):
   * bucketed sustains higher steady-state tokens/s than BOTH ablations;
   * warm buckets are ZERO-PROBE: the measured pass spends no refine
     probes (every resolution is a tuning-cache / router hit);
-  * the bucketed compile set stays strictly smaller than naive's.
+  * the bucketed compile set stays strictly smaller than naive's;
+  * all five families (dense, moe, ssm, hybrid, encdec) complete their
+    whole request mix through the ragged pool, steady-state tokens/s
+    reported per family (``serve_family[...]`` rows — CI extracts them
+    into the ``serve-family-matrix`` workflow artifact).
 
     PYTHONPATH=src python -m benchmarks.serve_bench
 """
@@ -50,6 +56,50 @@ MEASURED = TrafficConfig(seed=1, **_BASE)
 def _cfg():
     return dataclasses.replace(get_config("smollm-135m").reduced(),
                                dtype="float32")
+
+
+#: one representative arch per CacheAdapter family
+FAMILY_MATRIX = (
+    ("dense", "smollm-135m"),
+    ("moe", "deepseek-moe-16b"),
+    ("ssm", "mamba2-1.3b"),
+    ("hybrid", "zamba2-7b"),
+    ("encdec", "whisper-medium"),
+)
+
+_FAM_BASE = dict(n_requests=8, rate=200.0, mode="open",
+                 prompt_dist=("uniform", 4, 24),
+                 output_dist=("uniform", 2, 8), vocab=512)
+FAM_WARMUP = TrafficConfig(seed=2, **_FAM_BASE)
+FAM_MEASURED = TrafficConfig(seed=3, **_FAM_BASE)
+
+
+def _family_matrix(print_fn) -> dict:
+    """Every family through the SAME engine + ragged pool: warmup pass,
+    reset, then a fresh steady-state mix.  Completion of the full mix
+    IS the zero-fallback proof — the fixed-batch loop is gone, so the
+    pool either serves the family or the engine refuses to build."""
+    out = {}
+    for family, arch in FAMILY_MATRIX:
+        cfg = dataclasses.replace(get_config(arch).reduced(),
+                                  dtype="float32")
+        eng = ServeEngine(cfg, slots=SLOTS, max_len=128,
+                          tuning_cache=TuningCache(path=None))
+        assert eng.adapter.family == family, (family, eng.adapter.family)
+        drive(eng, FAM_WARMUP)               # cold: compiles + refines
+        eng.reset()
+        report = drive(eng, FAM_MEASURED)    # steady state
+        s = report.summary
+        assert s.n_completed == FAM_MEASURED.n_requests, \
+            f"{family}: {s.n_completed}/{FAM_MEASURED.n_requests} served"
+        print_fn(
+            f"serve_family[{family}],"
+            f"{s.decode_s * 1e6 / max(s.decode_steps, 1):.0f},"
+            f"tok_s={s.tokens_per_s:.1f};arch={arch};"
+            f"decode_shapes={report.compiled_decode_shapes};"
+            f"util={s.utilization:.2f}")
+        out[family] = s.tokens_per_s
+    return out
 
 
 def _steady_state(name, cfg, params, spec, admission, print_fn):
@@ -110,6 +160,9 @@ def run(print_fn=print) -> dict:
     assert bucketed.compiled_decode_shapes < naive.compiled_decode_shapes, \
         "bucketing must keep the compile set smaller than per-shape dispatch"
 
+    families = _family_matrix(print_fn)
+    assert set(families) == {f for f, _ in FAMILY_MATRIX}
+
     return {
         "bucketed_tok_s": tb,
         "naive_tok_s": tn,
@@ -117,6 +170,7 @@ def run(print_fn=print) -> dict:
         "warm_bucket_probes": bprobes,
         "bucketed_decode_shapes": bucketed.compiled_decode_shapes,
         "naive_decode_shapes": naive.compiled_decode_shapes,
+        "family_tok_s": families,
     }
 
 

@@ -1,12 +1,15 @@
 """Serving driver — a thin CLI over the ``repro.serve`` engine.
 
 The real serving loop lives in ``repro.serve.engine`` (continuous
-batching, bucketed tuned dispatch, paged-KV accounting; see
-docs/SERVING.md).  This module keeps two entry points:
+batching, bucketed tuned dispatch, family-generic CacheAdapter pool,
+paged-KV accounting; see docs/SERVING.md).  This module keeps two entry
+points:
 
   * ``serve_batch`` — the fixed-mix convenience API (all requests
     submitted at once, slots = requests): what the system tests and
-    quickstart examples call;
+    quickstart examples call.  Every adapter-backed family — dense, MoE,
+    SSM, hybrid, encoder-decoder — runs on the engine's ragged pool;
+    there is no fixed-batch fallback loop anymore;
   * ``main`` — synthetic-traffic CLI: Poisson arrivals through the
     engine, with the tuner's ``--measure {off,cached,live}`` passthrough
     so the profiler's measured-cost tuning can refine serving buckets
@@ -21,21 +24,12 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.configs.base import ShapeConfig
 from repro.core.mapper import MappingPolicy
-from repro.launch.mesh import make_local_mesh
-from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models import build_model
-from repro.runtime import sharding as shd
-from repro.serve import (POOL_FAMILIES, BucketSpec, ServeEngine,
-                         TrafficConfig, drive)
+from repro.serve import BucketSpec, ServeEngine, TrafficConfig, drive
 from repro.tuner import MEASURE_MODES
 
 
@@ -51,93 +45,33 @@ class ServeStats:
     outputs: list
 
 
-def _serve_batch_fixed(cfg, prompts, *, max_new_tokens, mesh, params):
-    """Family-generic fixed-batch loop (the pre-engine path): scalar-pos
-    decode over one padded batch.  Kept for the cache families the
-    ragged pool does not speak yet (ssm/hybrid/encdec/vlm) — all rows
-    step together, but ``last_pos`` still reads each prompt's true final
-    token, so ragged prompts never sample from padding."""
-    model = build_model(cfg)
-    if mesh is None:
-        mesh = make_local_mesh(1, 1)
-    b = len(prompts)
-    max_prompt = max(len(p) for p in prompts)
-    max_len = max_prompt + max_new_tokens + 1
-    plan = shd.resolve_plan(cfg, mesh,
-                            ShapeConfig("serve", max_len, b, "decode"))
-    if params is None:
-        params = model.init(jax.random.key(0))
-    prefill = jax.jit(make_prefill_step(model, plan, max_len))
-    decode = jax.jit(make_decode_step(model, plan))
-
-    toks = np.zeros((b, max_prompt), np.int32)
-    for i, p in enumerate(prompts):
-        toks[i, :len(p)] = p
-    batch = {"tokens": jnp.asarray(toks)}
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.zeros((b, cfg.prefix_tokens, cfg.d_model),
-                                     model.dtype)
-    if cfg.family == "encdec":
-        batch["frames"] = jnp.zeros((b, cfg.encoder_tokens, cfg.d_model),
-                                    model.dtype)
-    offset = cfg.prefix_tokens if cfg.family == "vlm" else 0
-    last = jnp.asarray([offset + len(p) - 1 for p in prompts], jnp.int32)
-
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, batch, last)
-    logits = jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-
-    out = [list(p) for p in prompts]
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    t0 = time.perf_counter()
-    for _ in range(max_new_tokens):
-        for i in range(b):
-            out[i].append(int(tok[i, 0]))
-        logits, cache = decode(params, cache, tok)
-        lg = logits[:, 0] if logits.ndim == 3 else logits
-        tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-    return out, t_prefill, t_decode
-
-
 def serve_batch(arch: str, prompts: list[list[int]], *,
                 max_new_tokens: int = 16, reduced: bool = True,
                 mesh=None, params=None, verbose: bool = True,
                 policy: MappingPolicy | str = MappingPolicy.TUNED,
                 measure: str = "off") -> ServeStats:
     """Serve a fixed request mix: every prompt admitted at t=0, one slot
-    each, greedy decode to ``max_new_tokens``.  Attention-cache families
-    run on the engine's ragged pool (per-row positions: no request reads
-    another's padding); the other families keep the fixed-batch loop."""
+    each, greedy decode to ``max_new_tokens``, on the engine's ragged
+    pool (per-row positions: no request reads another's padding).  The
+    family's ``CacheAdapter`` supplies the pool state, so this is one
+    code path for all served families."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
-    if cfg.family not in POOL_FAMILIES:
-        outputs, t_prefill, t_decode = _serve_batch_fixed(
-            cfg, prompts, max_new_tokens=max_new_tokens, mesh=mesh,
-            params=params)
-        stats = ServeStats(
-            n_requests=len(prompts),
-            prefill_tokens=sum(len(p) for p in prompts),
-            decoded_tokens=len(prompts) * max_new_tokens,
-            prefill_s=t_prefill, decode_s=t_decode, outputs=outputs)
-    else:
-        max_len = max(len(p) for p in prompts) + max_new_tokens + 1
-        engine = ServeEngine(cfg, slots=len(prompts), max_len=max_len,
-                             mesh=mesh, params=params, policy=policy,
-                             measure=measure, verbose=False)
-        reqs = [engine.submit(p, max_new_tokens=max_new_tokens)
-                for p in prompts]
-        report = engine.run()
-        s = report.summary
-        stats = ServeStats(
-            n_requests=len(prompts),
-            prefill_tokens=sum(len(p) for p in prompts),
-            decoded_tokens=s.output_tokens,
-            prefill_s=s.prefill_s, decode_s=s.decode_s,
-            outputs=[report.outputs[r.rid] for r in reqs])
+    max_len = max(len(p) for p in prompts) + max_new_tokens + 1
+    engine = ServeEngine(cfg, slots=len(prompts), max_len=max_len,
+                         mesh=mesh, params=params, policy=policy,
+                         measure=measure, verbose=False)
+    reqs = [engine.submit(p, max_new_tokens=max_new_tokens)
+            for p in prompts]
+    report = engine.run()
+    s = report.summary
+    stats = ServeStats(
+        n_requests=len(prompts),
+        prefill_tokens=sum(len(p) for p in prompts),
+        decoded_tokens=s.output_tokens,
+        prefill_s=s.prefill_s, decode_s=s.decode_s,
+        outputs=[report.outputs[r.rid] for r in reqs])
     if verbose:
         print(f"[serve] {cfg.name}: {stats.n_requests} reqs, prefill "
               f"{stats.prefill_tokens} tok in {stats.prefill_s:.2f}s, decoded "

@@ -213,10 +213,16 @@ def make_prefill_step(model: Model, plan: Plan, max_len: Optional[int],
 
 def make_decode_step(model: Model, plan: Plan,
                      flags: Optional[dict] = None):
+    """``decode_block`` is the bucket-tuned decode-attention mapping the
+    serving engine threads from ``BucketRouter`` into the executed step;
+    jit it as a static argument (a new block is a new bucket, and bucket
+    changes are the compile events the lattice bounds).  ``None`` keeps
+    the plain einsum decode path."""
     ctx = make_ctx(plan)
     ctx.flags.update(flags or {})
 
-    def decode_step(params, cache, tokens):
-        return model.decode_step(params, cache, tokens, ctx=ctx)
+    def decode_step(params, cache, tokens, decode_block=None):
+        return model.decode_step(params, cache, tokens, ctx=ctx,
+                                 decode_block=decode_block)
 
     return decode_step

@@ -328,6 +328,93 @@ def decode_attention_grouped(
     return out.astype(q.dtype)
 
 
+def blocked_decode_attention(
+    q: jax.Array,                 # (B, G, R, D) — one new token
+    k_cache: jax.Array,           # (B, T, G, D)
+    v_cache: jax.Array,
+    cache_len,                    # scalar or (B,)
+    *,
+    block: int,
+    window=None,                  # int | traced scalar | None
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Split-KV decode that sweeps the cache in ``block``-sized chunks
+    with an online softmax — the reference execution of the tuned
+    ``decode_block`` mapping (kernels/decode_attention's schedule) on
+    platforms without the Pallas kernel.  ``block`` changes the lowered
+    loop structure (the grid the tuner decided), never the math."""
+    b, g, r, d = q.shape
+    t = k_cache.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    block = max(1, min(int(block), t))
+    tp = -(-t // block) * block
+    pad = ((0, 0), (0, tp - t), (0, 0), (0, 0))
+    kc = jnp.pad(k_cache, pad) if tp != t else k_cache
+    vc = jnp.pad(v_cache, pad) if tp != t else v_cache
+    n = tp // block
+    kc = jnp.moveaxis(kc.astype(jnp.float32).reshape(b, n, block, g, d), 1, 0)
+    vc = jnp.moveaxis(vc.astype(jnp.float32).reshape(b, n, block, g, d), 1, 0)
+    qf = q.astype(jnp.float32) * scale
+    clen = jnp.asarray(cache_len)
+    clen = clen[:, None] if clen.ndim else clen[None, None]      # (B|1, 1)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, ci = xs
+        s = jnp.einsum("bgrd,bcgd->bgrc", qf, kb)
+        pos = ci * block + jnp.arange(block)[None, :]            # (1, block)
+        ok = pos < clen
+        if window is not None:
+            ok &= pos > clen - 1 - window
+        s = jnp.where(ok[:, None, None, :], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe[..., None]), 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + jnp.sum(p, -1)
+        acc_new = acc * alpha[..., None] \
+            + jnp.einsum("bgrc,bcgd->bgrd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, g, r), _NEG, jnp.float32),
+            jnp.zeros((b, g, r), jnp.float32),
+            jnp.zeros((b, g, r, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, (kc, vc, jnp.arange(n)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def pallas_decode_attention(
+    q: jax.Array,                 # (B, G, R, D)
+    k_cache: jax.Array,           # (B, T, G, D)
+    v_cache: jax.Array,
+    cache_len: jax.Array,         # (B,)
+    *,
+    block: int,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Run the Pallas flash-decode kernel with the tuned ``block`` over
+    the grouped cache layout: one kernel instance per (batch, kv-group,
+    q-head) row, the cache block shared across the R q-heads of a group."""
+    from repro.core.hw import detect
+    from repro.kernels import decode_attention as _dak
+
+    hw = detect()
+    kt = jnp.moveaxis(k_cache, 2, 1)                  # (B, G, T, D)
+    vt = jnp.moveaxis(v_cache, 2, 1)
+
+    def one(q_row, k_row, v_row, clen):
+        return _dak.decode_attention_pallas(
+            q_row, k_row, v_row, clen, hw=hw, scale=scale,
+            block_s=int(block), interpret=interpret)
+
+    per_r = jax.vmap(one, in_axes=(0, None, None, None))    # R (cache shared)
+    per_g = jax.vmap(per_r, in_axes=(0, 0, 0, None))        # G
+    per_b = jax.vmap(per_g, in_axes=(0, 0, 0, 0))           # B
+    return per_b(q, kt, vt, cache_len)
+
+
 # --------------------------------------------------------------------------- #
 # Full attention block
 # --------------------------------------------------------------------------- #
@@ -450,21 +537,50 @@ def attention_decode(
     cos=None,
     sin=None,
     window: Optional[int] = None,
+    decode_block: Optional[int] = None,
     ctx: ShardCtx,
 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
     """One-token decode; returns (out (B,1,D), updated caches).
 
     A vector ``pos`` (B,) drives the ragged serving pool: every row
     writes its new KV at its own position and masks its own cache
-    length, so mixed-progress requests share one compiled step."""
+    length, so mixed-progress requests share one compiled step.
+
+    ``decode_block`` is the bucket-tuned cache block resolved by the
+    serving router (``serve.buckets`` via ``tuner.resolve_plan``): when
+    given, the attention sweep EXECUTES at that mapping — the Pallas
+    flash-decode kernel where available, otherwise the blocked reference
+    sweep with the same schedule.  ``None`` keeps the plain einsum path
+    (GSPMD-distributable; the non-serving callers)."""
     b = x.shape[0]
     q, k, v = _project_qkv(params, x, cfg, cos, sin, ctx)
     # write the new kv at position `pos` (quantizing if the cache is int8)
     k_cache = _cache_write(k_cache, k, pos)
     v_cache = _cache_write(v_cache, v, pos)
-    o = decode_attention_grouped(q[:, 0], _cache_read(k_cache, x.dtype),
-                                 _cache_read(v_cache, x.dtype), pos + 1,
-                                 window=window)
+    kr = _cache_read(k_cache, x.dtype)
+    vr = _cache_read(v_cache, x.dtype)
+    clen = pos + 1
+    if decode_block is None:
+        o = decode_attention_grouped(q[:, 0], kr, vr, clen, window=window)
+    else:
+        use_pallas, interpret = _pallas_mode()
+        if use_pallas and window is None:
+            clen_v = jnp.broadcast_to(jnp.asarray(clen, jnp.int32), (b,))
+            o = pallas_decode_attention(q[:, 0], kr, vr, clen_v,
+                                        block=decode_block,
+                                        interpret=interpret)
+        else:
+            # sliding windows (traced per layer) stay on the reference
+            # sweep: the kernel masks only cache length
+            o = blocked_decode_attention(q[:, 0], kr, vr, clen,
+                                         block=decode_block, window=window)
     out = jnp.einsum("bhk,hkd->bd", o.reshape(b, -1, cfg.head_dim),
                      params["wo"])
     return out[:, None, :], (k_cache, v_cache)
+
+
+def _pallas_mode() -> tuple[bool, bool]:
+    """(use_pallas, interpret) from the process-wide kernel force mode —
+    the same switch every ``kernels.ops`` entry point obeys."""
+    from repro.kernels.ops import _use_pallas
+    return _use_pallas()

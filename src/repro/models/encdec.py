@@ -148,16 +148,24 @@ def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
 
 
 def encdec_decode(params: dict, cache: dict, tokens: jax.Array,
-                  cfg: ModelConfig, *, ctx: ShardCtx):
+                  cfg: ModelConfig, *, ctx: ShardCtx,
+                  decode_block=None):
+    """One decoder step.  ``cache["pos"]`` may be a scalar (fixed batch)
+    or a (B,) vector (the serving pool's ragged rows); ``decode_block``
+    is the bucket-tuned attention sweep mapping (see
+    ``attention.attention_decode``).  Cross-attention KV is static per
+    request, so only self-attention consumes the tuned block."""
     x = embed(params["embed"], tokens)
     pos = cache["pos"]
-    cos, sin = rope_tables(pos[None], cfg.head_dim, cfg.rope_theta)
+    rope_pos = pos[:, None] if pos.ndim else pos[None]
+    cos, sin = rope_tables(rope_pos, cfg.head_dim, cfg.rope_theta)
 
     def body(x, xs):
         lp, kc, vc, ck, cv = opt_barrier(xs)
         h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
         a, (kc, vc) = attention_decode(lp["attn"], h, cfg, kc, vc, pos,
-                                       cos=cos, sin=sin, ctx=ctx)
+                                       cos=cos, sin=sin,
+                                       decode_block=decode_block, ctx=ctx)
         x = x + a
         h = rmsnorm(x, lp["ln_x"], cfg.norm_eps)
         x = x + _cross_attn(lp["cross"], h, ck, cv, cfg, ctx)

@@ -128,11 +128,17 @@ def hybrid_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
 
 
 def hybrid_decode(params: dict, cache: dict, tokens: jax.Array,
-                  cfg: ModelConfig, *, ctx: ShardCtx):
+                  cfg: ModelConfig, *, ctx: ShardCtx,
+                  decode_block=None):
+    """One decode step.  ``cache["pos"]`` may be a scalar (fixed batch)
+    or a (B,) vector (the serving pool's ragged rows); ``decode_block``
+    is the bucket-tuned attention sweep mapping (see
+    ``attention.attention_decode``)."""
     ng, k = n_groups(cfg), cfg.hybrid_attn_every
     x = embed(params["embed"], tokens)
     pos = cache["pos"]
-    cos, sin = rope_tables(pos[None], cfg.head_dim, cfg.rope_theta)
+    rope_pos = pos[:, None] if pos.ndim else pos[None]
+    cos, sin = rope_tables(rope_pos, cfg.head_dim, cfg.rope_theta)
     flags = _group(_active_flags(cfg), ng, k)
     gblocks = _group(params["blocks"], ng, k)
     gstate = _group(cache["state"], ng, k)
@@ -142,7 +148,8 @@ def hybrid_decode(params: dict, cache: dict, tokens: jax.Array,
         gp, gf, kc, vc, st, cv = opt_barrier(xs)
         h = rmsnorm(x, params["shared"]["ln1"], cfg.norm_eps)
         a, (kc, vc) = attention_decode(params["shared"]["attn"], h, cfg,
-                                       kc, vc, pos, cos=cos, sin=sin, ctx=ctx)
+                                       kc, vc, pos, cos=cos, sin=sin,
+                                       decode_block=decode_block, ctx=ctx)
         x = x + a
         h = rmsnorm(x, params["shared"]["ln2"], cfg.norm_eps)
         x = x + mlp(params["shared"]["mlp"], h, cfg.mlp_act, ctx)

@@ -191,16 +191,26 @@ class Model:
             return jnp.take_along_axis(logits, idx, axis=1), cache
         return logits[:, -1:], cache
 
-    def decode_step(self, params, cache, tokens, *, ctx: ShardCtx = NO_SHARD):
+    def decode_step(self, params, cache, tokens, *, ctx: ShardCtx = NO_SHARD,
+                    decode_block: Optional[int] = None):
+        """One decode step.  ``decode_block`` is the bucket-tuned
+        decode-attention cache block resolved by the serving router; it
+        selects the *executed* attention sweep (Pallas kernel or blocked
+        reference — see ``attention.attention_decode``).  ``None`` keeps
+        the plain einsum path; attention-free families ignore it."""
         cfg, f = self.cfg, self.cfg.family
         if f in ("dense", "moe", "vlm"):
-            return tf_mod.decode_step(params, cache, tokens, cfg, ctx=ctx)
+            return tf_mod.decode_step(params, cache, tokens, cfg, ctx=ctx,
+                                      decode_block=decode_block)
         if f == "ssm":
-            return ssm_mod.ssm_decode(params, cache, tokens, cfg, ctx=ctx)
+            return ssm_mod.ssm_decode(params, cache, tokens, cfg, ctx=ctx,
+                                      decode_block=decode_block)
         if f == "hybrid":
-            return hybrid_mod.hybrid_decode(params, cache, tokens, cfg, ctx=ctx)
+            return hybrid_mod.hybrid_decode(params, cache, tokens, cfg,
+                                            ctx=ctx, decode_block=decode_block)
         if f == "encdec":
-            return encdec_mod.encdec_decode(params, cache, tokens, cfg, ctx=ctx)
+            return encdec_mod.encdec_decode(params, cache, tokens, cfg,
+                                            ctx=ctx, decode_block=decode_block)
         raise ValueError(f)
 
     # ------------------------------------------------------------------ #

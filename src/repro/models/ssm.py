@@ -104,7 +104,11 @@ def ssm_block(params: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardCtx,
                 params["out_norm"], cfg.norm_eps)
     out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
     if return_cache:
-        conv_tail = xbc_raw[:, -(cfg.ssm_conv - 1):, :].astype(x.dtype)
+        # the decode conv window is the last K-1 inputs; prompts shorter
+        # than that see pre-sequence zeros, matching _causal_conv's left pad
+        tail = cfg.ssm_conv - 1
+        pad = ((0, 0), (max(tail - s, 0), 0), (0, 0))
+        conv_tail = jnp.pad(xbc_raw, pad)[:, -tail:, :].astype(x.dtype)
         return out, (state, conv_tail)
     return out
 
@@ -226,7 +230,14 @@ def ssm_init_cache(cfg: ModelConfig, batch: int, dtype, abstract=False):
 
 
 def ssm_decode(params: dict, cache: dict, tokens: jax.Array,
-               cfg: ModelConfig, *, ctx: ShardCtx):
+               cfg: ModelConfig, *, ctx: ShardCtx,
+               decode_block=None):
+    """One recurrent decode step.  The state update is position-free, so
+    a vector ``cache["pos"]`` (the serving pool's ragged rows) needs no
+    special handling — it only advances per row.  ``decode_block`` is
+    accepted for decode-step API uniformity and ignored: there is no
+    attention sweep to map (the family is attention-free)."""
+    del decode_block
     x = embed(params["embed"], tokens)
 
     def body(x, xs):

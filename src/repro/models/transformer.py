@@ -272,12 +272,17 @@ def decode_step(
     cfg: ModelConfig,
     *,
     ctx: ShardCtx = NO_SHARD,
+    decode_block: Optional[int] = None,
 ):
     """One greedy decode step: (logits (B,1,V), updated cache).
 
     ``cache["pos"]`` may be a scalar (every row at the same depth — the
     fixed-batch loop) or a (B,) vector (the serving pool's ragged rows:
-    per-row rope positions, cache writes, and length masks)."""
+    per-row rope positions, cache writes, and length masks).
+
+    ``decode_block`` — the bucket-tuned cache block from the serving
+    router — selects the executed attention sweep (see
+    ``attention.attention_decode``); ``None`` keeps the einsum path."""
     x = embed(params["embed"], tokens)
     x = ctx.p(x, "batch", None, "embed")
     pos = cache["pos"]
@@ -294,7 +299,8 @@ def decode_step(
         win = _layer_window(cfg, is_global)
         a, (k_c, v_c) = attention_decode(
             layer_params["attn"], h, cfg, k_c, v_c, pos,
-            cos=cos, sin=sin, window=win, ctx=ctx)
+            cos=cos, sin=sin, window=win, decode_block=decode_block,
+            ctx=ctx)
         x = x + a
         h = rmsnorm(x, layer_params["ln2"], cfg.norm_eps)
         m, _ = _mlp_or_moe(layer_params, cfg, h, ctx)

@@ -7,7 +7,11 @@ the thing that picks each shape bucket's kernel plans:
 
   ``buckets``    quantize live geometry onto a bounded lattice; route
                  each bucket through ``tuner.resolve_plan`` (per-bucket
-                 ``WorkloadSignature``, zero-probe warm hits),
+                 ``WorkloadSignature``, zero-probe warm hits); thread
+                 the resolved ``decode_block`` into the executed step,
+  ``adapters``   the CacheAdapter layer: per-family decode-cache state
+                 (init / row writes / growth) behind one interface, so
+                 all five families ride the same ragged pool,
   ``kvcache``    block/slot accounting under the ragged pool arrays,
   ``scheduler``  FIFO queue + admission control + slot recycling,
   ``engine``     the prefill/decode interleaving loop itself,
@@ -15,9 +19,12 @@ the thing that picks each shape bucket's kernel plans:
   ``metrics``    TTFT / TPOT / throughput / utilization accounting.
 """
 
+from repro.serve.adapters import (ADAPTERS, CacheAdapter,
+                                  FamilyCacheAdapter, get_adapter)
 from repro.serve.buckets import (Bucket, BucketPlan, BucketRouter,
-                                 BucketSpec, RouterStats)
-from repro.serve.engine import POOL_FAMILIES, ServeEngine, ServeReport
+                                 BucketSpec, KERNEL_TABLE, KernelRow,
+                                 RouterStats)
+from repro.serve.engine import ServeEngine, ServeReport
 from repro.serve.kvcache import BlockAllocator, KVCachePool, Lease
 from repro.serve.metrics import (RequestRecord, ServeMetrics, ServeSummary,
                                  percentile)
@@ -25,15 +32,20 @@ from repro.serve.scheduler import ADMISSION_MODES, Request, Scheduler
 from repro.serve.traffic import TrafficConfig, drive, sample_length, synthesize
 
 __all__ = [
+    "ADAPTERS",
     "ADMISSION_MODES",
     "BlockAllocator",
     "Bucket",
     "BucketPlan",
     "BucketRouter",
     "BucketSpec",
+    "CacheAdapter",
+    "FamilyCacheAdapter",
+    "KERNEL_TABLE",
+    "KernelRow",
     "KVCachePool",
     "Lease",
-    "POOL_FAMILIES",
+    "get_adapter",
     "percentile",
     "Request",
     "RequestRecord",

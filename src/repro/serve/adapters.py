@@ -1,0 +1,164 @@
+"""CacheAdapter — the family-generic face of the ragged decode pool.
+
+The serving engine keeps one physical cache pytree for the whole pool
+(slots rows, one request per row) and needs five operations on it, none
+of which should know what family it is serving:
+
+  ``init_pool``       build the pool cache with a per-row ``pos`` vector
+  ``prefill_len``     how long to pad a prompt before prefill
+  ``prefill_extras``  family-specific prefill inputs (encoder frames)
+  ``write_row``       scatter one prefilled request's cache into a slot
+  ``grow``            pad the pool's length-bearing arrays to a bucket
+
+``CacheAdapter`` is that protocol; ``FamilyCacheAdapter`` implements it
+once, generically, because every family's decode cache is a dict of
+layer-leading arrays ``(L, batch, ...)`` plus ``pos`` — the families
+differ only in *which* keys carry a time axis to pad and whether prompt
+padding is safe:
+
+  dense/moe   k/v (L, B, T, G, hd): time axis grows with the bucket;
+  hybrid      k/v per attention group + position-free ssm state/conv;
+  encdec      self-attention k/v grow; cross ck/cv are static per row;
+  ssm         state/conv only — nothing carries a time axis, the pool
+              "grows" in block accounting alone.
+
+Prompt padding: attention caches mask per-row length, so right-padding a
+prompt to its bucket never leaks — but a *recurrent* state after the
+padded tail is contaminated (there is no mask on a carried state), so
+the ssm adapter prefills at the exact prompt length instead
+(``prefill_buckets=False``).  Hybrid prefill seeds its ssm states at
+zero (see ``models.model.Model.prefill``), so only its masked attention
+caches carry prompt content and bucketing stays safe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Protocol
+
+import jax.numpy as jnp
+
+__all__ = ["CacheAdapter", "FamilyCacheAdapter", "ADAPTERS", "get_adapter"]
+
+
+class CacheAdapter(Protocol):
+    """What the engine (and the accounting layer under it) asks of a
+    family's decode-cache state.  Implementations must be pure: every
+    mutator returns a new cache pytree."""
+
+    family: str
+    #: keys whose arrays carry the pool's time axis (L, B, T, ...) and
+    #: must pad when the length bucket steps up; empty for recurrent
+    #: caches, in which case pool growth is block accounting only and
+    #: the compiled decode shape never changes with kv_len
+    length_keys: tuple[str, ...]
+    #: False — prefill at the exact prompt length (recurrent state is
+    #: exact only at the sequence end; no mask can hide padded steps)
+    prefill_buckets: bool
+
+    def init_pool(self, model: Any, slots: int, kv_len: int, *,
+                  expand_kv: bool = False) -> dict: ...
+
+    def prefill_len(self, prompt_len: int,
+                    quantize: Callable[[int], int]) -> int: ...
+
+    def prefill_extras(self, model: Any, rows: int) -> dict: ...
+
+    def write_row(self, cache: dict, slot: int, row_cache: dict,
+                  prompt_len: int, kv_len: int) -> dict: ...
+
+    def grow(self, cache: dict, new_len: int) -> dict: ...
+
+    @property
+    def grows_with_len(self) -> bool: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyCacheAdapter:
+    """Generic ``CacheAdapter`` over dict-of-(L, batch, ...) caches."""
+
+    family: str
+    length_keys: tuple[str, ...] = ("k", "v")
+    prefill_buckets: bool = True
+    extras: Optional[Callable[[Any, int], dict]] = None
+
+    @property
+    def grows_with_len(self) -> bool:
+        return bool(self.length_keys)
+
+    def init_pool(self, model, slots: int, kv_len: int, *,
+                  expand_kv: bool = False) -> dict:
+        cache = model.init_cache(slots, kv_len, expand_kv=expand_kv,
+                                 cache_dtype=None)
+        cache["pos"] = jnp.zeros((slots,), jnp.int32)   # per-row, ragged
+        return cache
+
+    def prefill_len(self, prompt_len: int, quantize) -> int:
+        return quantize(prompt_len) if self.prefill_buckets else prompt_len
+
+    def prefill_extras(self, model, rows: int) -> dict:
+        return self.extras(model, rows) if self.extras else {}
+
+    def write_row(self, cache: dict, slot: int, row_cache: dict,
+                  prompt_len: int, kv_len: int) -> dict:
+        """Scatter a single-row prefill cache into the pool at ``slot``.
+        Length-bearing keys are right-padded from the prompt bucket to
+        the pool row; everything else (recurrent states, cross KV) lands
+        shape-exact.  The row's ``pos`` becomes the true prompt length —
+        the mask/rope boundary, regardless of padding."""
+        out = dict(cache)
+        for key, arr in row_cache.items():
+            if key == "pos":
+                continue
+            row = arr[:, 0]                        # (L, ...) single row
+            if key in self.length_keys:
+                pad = kv_len - row.shape[1]
+                assert pad >= 0, "prompt bucket outgrew the pool row"
+                widths = ((0, 0), (0, pad)) + ((0, 0),) * (row.ndim - 2)
+                row = jnp.pad(row, widths)
+            out[key] = out[key].at[:, slot].set(row)
+        out["pos"] = out["pos"].at[slot].set(prompt_len)
+        return out
+
+    def grow(self, cache: dict, new_len: int) -> dict:
+        """Pad the length-bearing arrays up to the new bucket.  A cache
+        with no time axis returns unchanged — the bucket step is then
+        purely a KV-block accounting event."""
+        out = dict(cache)
+        for key in self.length_keys:
+            pad = new_len - out[key].shape[2]
+            assert pad > 0, "grow called without a longer bucket"
+            widths = ((0, 0), (0, 0), (0, pad)) + \
+                ((0, 0),) * (out[key].ndim - 3)
+            out[key] = jnp.pad(out[key], widths)
+        return out
+
+
+def _encdec_frames(model, rows: int) -> dict:
+    """Stub encoder frames (the conv/mel frontend is a stub repo-wide:
+    see ``models.encdec``); shaped per request row."""
+    cfg = model.cfg
+    return {"frames": jnp.zeros((rows, cfg.encoder_tokens, cfg.d_model),
+                                model.dtype)}
+
+
+#: family -> adapter: the single registry the engine consults instead of
+#: a family capability check.  ``vlm`` is the one absent family — its
+#: prefix patch tokens shift every cache position by ``prefix_tokens``,
+#: which the pool's position accounting does not model yet.
+ADAPTERS: dict[str, CacheAdapter] = {
+    "dense": FamilyCacheAdapter("dense"),
+    "moe": FamilyCacheAdapter("moe"),
+    "ssm": FamilyCacheAdapter("ssm", length_keys=(), prefill_buckets=False),
+    "hybrid": FamilyCacheAdapter("hybrid"),
+    "encdec": FamilyCacheAdapter("encdec", extras=_encdec_frames),
+}
+
+
+def get_adapter(family: str) -> CacheAdapter:
+    try:
+        return ADAPTERS[family]
+    except KeyError:
+        raise NotImplementedError(
+            f"no CacheAdapter for family {family!r}; the ragged pool "
+            f"serves {tuple(sorted(ADAPTERS))}") from None

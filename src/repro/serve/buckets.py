@@ -33,7 +33,7 @@ from repro.tuner import (ResolveInfo, TuningCache, WorkloadSignature,
                          resolve_plan, workload_signature)
 
 __all__ = ["BucketSpec", "Bucket", "BucketPlan", "RouterStats",
-           "BucketRouter"]
+           "BucketRouter", "KernelRow", "KERNEL_TABLE"]
 
 BUCKET_MODES = ("pow2", "linear", "exact", "fixed")
 
@@ -121,19 +121,59 @@ class Bucket:
 
 @dataclasses.dataclass(frozen=True)
 class BucketPlan:
-    """Resolved per-bucket kernel mappings + their provenance."""
+    """Resolved per-bucket kernel mappings + their provenance.
+
+    ``decode_block`` is not a record: the engine threads it into the
+    executed decode step (``Model.decode_step(decode_block=...)``), so
+    the bucket decision changes the attention sweep that actually runs.
+    Both fields are ``None`` for attention-free families."""
 
     bucket: Bucket
     sig: WorkloadSignature
-    decode_block: int                  # decode_attention cache block
-    decode_info: ResolveInfo
+    decode_block: Optional[int]        # decode_attention cache block
+    decode_info: Optional[ResolveInfo]
     prefill_blocks: Optional[tuple]    # flash (block_q, block_k) | None
     prefill_info: Optional[ResolveInfo]
 
     @property
     def probes(self) -> int:
-        return self.decode_info.probes + (
-            self.prefill_info.probes if self.prefill_info else 0)
+        return sum(i.probes for i in (self.decode_info, self.prefill_info)
+                   if i is not None)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelRow:
+    """One row of the router's kernel-spec table: which dispatcher
+    kernel a bucket resolves, when it applies, how its workload desc is
+    built from the bucket geometry, and which decision variables the
+    plan contributes to ``BucketPlan``."""
+
+    kernel: str                                        # KERNEL_REGISTRY name
+    applies: Any                                       # (cfg) -> bool
+    desc: Any                                          # (cfg, bucket, db) -> dict
+    extract: Any                                       # plan -> plan value
+
+
+#: the per-bucket kernel set, declaratively.  Adding a bucket-tuned
+#: kernel is one row here plus a ``BucketPlan`` field — not another
+#: copy of the resolve/stats boilerplate.
+KERNEL_TABLE: tuple[KernelRow, ...] = (
+    KernelRow(
+        kernel="decode_attention",
+        applies=lambda cfg: not cfg.is_attention_free,
+        desc=lambda cfg, b, db: {
+            "s": b.kv_len, "d": cfg.head_dim,
+            "dtype": cfg.dtype, "dtype_bytes": db},
+        extract=lambda plan: int(plan)),
+    KernelRow(
+        kernel="flash_attention",
+        applies=lambda cfg: not cfg.is_attention_free,
+        desc=lambda cfg, b, db: {
+            "seq_q": b.kv_len, "seq_kv": b.kv_len,
+            "head_dim": cfg.head_dim, "dtype": cfg.dtype,
+            "dtype_bytes": db, "causal": True},
+        extract=lambda plan: (int(plan.block_q), int(plan.block_k))),
+)
 
 
 @dataclasses.dataclass
@@ -205,7 +245,10 @@ class BucketRouter:
         return plan, info
 
     def resolve(self, bucket: Bucket) -> BucketPlan:
-        """Per-bucket kernel mappings; memoized on the bucket signature."""
+        """Per-bucket kernel mappings; memoized on the bucket signature.
+        Each applicable ``KERNEL_TABLE`` row resolves through the tuner
+        (Eq. 1 seed -> cache -> refine), so the zero-probe warm-hit
+        guarantee is inherited per kernel."""
         sig = self.signature(bucket)
         hit = self._plans.get(sig.key)
         if hit is not None:
@@ -213,18 +256,20 @@ class BucketRouter:
             return hit
         self.stats.cold += 1
         db = 2 if self.cfg.dtype == "bfloat16" else 4
-        dblock, dinfo = self._resolve_kernel("decode_attention", {
-            "s": bucket.kv_len, "d": self.cfg.head_dim,
-            "dtype": self.cfg.dtype, "dtype_bytes": db})
-        pplan, pinfo = None, None
-        if not self.cfg.is_attention_free:
-            fplan, pinfo = self._resolve_kernel("flash_attention", {
-                "seq_q": bucket.kv_len, "seq_kv": bucket.kv_len,
-                "head_dim": self.cfg.head_dim, "dtype": self.cfg.dtype,
-                "dtype_bytes": db, "causal": True})
-            pplan = (int(fplan.block_q), int(fplan.block_k))
-        plan = BucketPlan(bucket=bucket, sig=sig, decode_block=int(dblock),
-                          decode_info=dinfo, prefill_blocks=pplan,
-                          prefill_info=pinfo)
+        values: dict[str, Any] = {}
+        infos: dict[str, Optional[ResolveInfo]] = {}
+        for row in KERNEL_TABLE:
+            if not row.applies(self.cfg):
+                values[row.kernel], infos[row.kernel] = None, None
+                continue
+            kplan, info = self._resolve_kernel(
+                row.kernel, row.desc(self.cfg, bucket, db))
+            values[row.kernel] = row.extract(kplan)
+            infos[row.kernel] = info
+        plan = BucketPlan(bucket=bucket, sig=sig,
+                          decode_block=values["decode_attention"],
+                          decode_info=infos["decode_attention"],
+                          prefill_blocks=values["flash_attention"],
+                          prefill_info=infos["flash_attention"])
         self._plans[sig.key] = plan
         return plan

@@ -2,10 +2,10 @@
 
 The engine interleaves prefill and decode over a live request pool:
 
-  * admitted requests prefill individually (prompt padded to its length
-    bucket, true-last-token logits via ``Model.prefill(last_pos=...)``)
-    and their primed KV rows are written into the pool at the leased
-    slot;
+  * admitted requests prefill individually (prompt padded to the length
+    the family's ``CacheAdapter`` asks for, true-last-token logits via
+    ``Model.prefill(last_pos=...)``) and their primed cache rows are
+    written into the pool at the leased slot;
   * the whole pool decodes one token per tick through ONE compiled step
     whose rows are ragged — every row carries its own position
     (``cache["pos"]`` is a vector; see ``models.attention``), so a slot
@@ -16,10 +16,18 @@ The engine interleaves prefill and decode over a live request pool:
     utilization stays near 1 while shapes — and therefore the tuned
     kernel mappings — are managed by the bucket lattice (``buckets``).
 
+The pool is family-generic: a ``CacheAdapter`` (``adapters``) owns the
+per-family cache state — init / row writes / growth over per-row
+positions — so dense, MoE, SSM, hybrid, and encoder-decoder models all
+ride the same ragged pool through one interface.
+
 Geometry changes (pool-length bucket steps) are the runtime events the
 paper's thesis is about: each one re-routes through ``tuner.resolve_plan``
 for the new bucket's kernel plans and triggers at most one new XLA
-compile, bounded by the lattice.
+compile, bounded by the lattice.  The resolved plan is not just recorded:
+its ``decode_block`` is threaded into the jitted decode step as a static
+argument, so the bucket decision selects the attention sweep that
+actually executes (``models.attention.attention_decode``).
 
 The engine's clock is injectable; when the pool is idle it fast-forwards
 to the next synthetic arrival, so open-loop traffic with sparse arrivals
@@ -44,6 +52,7 @@ from repro.launch.mesh import make_local_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import build_model
 from repro.runtime import sharding as shd
+from repro.serve.adapters import get_adapter
 from repro.serve.buckets import BucketRouter, BucketSpec
 from repro.serve.kvcache import KVCachePool
 from repro.serve.metrics import ServeMetrics, ServeSummary
@@ -51,11 +60,6 @@ from repro.serve.scheduler import Request, Scheduler
 from repro.tuner import TuningCache
 
 __all__ = ["ServeEngine", "ServeReport"]
-
-#: families whose decode cache is the {"k", "v", "pos"} attention layout
-#: the ragged pool understands.  SSM/hybrid/enc-dec caches have different
-#: state shapes; growing the pool to them is tracked in ROADMAP.md.
-POOL_FAMILIES = ("dense", "moe")
 
 
 @dataclasses.dataclass
@@ -101,10 +105,9 @@ class ServeEngine:
         cfg = get_config(arch) if isinstance(arch, str) else arch
         if isinstance(arch, str) and reduced:
             cfg = cfg.reduced()
-        if cfg.family not in POOL_FAMILIES:
-            raise NotImplementedError(
-                f"ragged pool serving supports families {POOL_FAMILIES}; "
-                f"{cfg.name} is {cfg.family!r}")
+        # one registry lookup decides serveability (raises for families
+        # with no adapter, e.g. vlm's position-shifting patch prefix)
+        self.adapter = get_adapter(cfg.family)
         self.cfg = cfg
         self.slots = slots
         self.spec = spec or BucketSpec(max_len=max_len,
@@ -141,9 +144,15 @@ class ServeEngine:
         self.outputs: dict[int, list[int]] = {}
 
         self._prefill = jax.jit(make_prefill_step(self.model, self.plan, None))
-        self._decode = jax.jit(make_decode_step(self.model, self.plan))
-        self._cache = self._fresh_cache(kv0)
+        # decode_block is static: a new block is a new bucket, and bucket
+        # steps are the (lattice-bounded) compile events
+        self._decode = jax.jit(make_decode_step(self.model, self.plan),
+                               static_argnames=("decode_block",))
+        self._cache = self.adapter.init_pool(self.model, slots, kv0,
+                                             expand_kv=self.plan.expand_kv)
         self._tokens = np.zeros((slots, 1), np.int32)
+        self._plan_len = -1                  # _current_plan memo key
+        self._bucket_plan = None
         self.compiled_decode_shapes: set[tuple[int, int]] = set()
         self.compiled_prefill_shapes: set[int] = set()
         self.pool_growths = 0
@@ -162,7 +171,8 @@ class ServeEngine:
         self.scheduler = Scheduler(self.pool, mode=self._admission)
         self.metrics = ServeMetrics()
         self.outputs = {}
-        self._cache = self._fresh_cache(kv0)
+        self._cache = self.adapter.init_pool(self.model, self.slots, kv0,
+                                             expand_kv=self.plan.expand_kv)
         self._tokens = np.zeros((self.slots, 1), np.int32)
         self.pool_growths = 0
         self._t0 = None
@@ -182,22 +192,26 @@ class ServeEngine:
 
     # -- pool plumbing ----------------------------------------------------
 
-    def _fresh_cache(self, kv_len: int) -> dict:
-        cache = self.model.init_cache(self.slots, kv_len,
-                                      expand_kv=self.plan.expand_kv,
-                                      cache_dtype=None)
-        cache["pos"] = jnp.zeros((self.slots,), jnp.int32)
-        return cache
+    def _decode_shape(self) -> tuple[int, int]:
+        """The compiled decode geometry.  Length-free caches (ssm) keep
+        ONE decode shape however far the accounting pool grows."""
+        kv = self.pool.kv_len if self.adapter.grows_with_len else 0
+        return (self.slots, kv)
+
+    def _current_plan(self):
+        """The live bucket's resolved plan, memoized on the pool length
+        so the per-token decode loop pays an int compare — not a
+        signature build — and RouterStats keeps counting bucket
+        resolutions, not decode ticks."""
+        if self._plan_len != self.pool.kv_len:
+            self._bucket_plan = self.router.resolve(
+                self.router.bucket(self.pool.kv_len))
+            self._plan_len = self.pool.kv_len
+        return self._bucket_plan
 
     def _grow_pool(self, new_len: int) -> None:
-        pad = new_len - self.pool.kv_len
-        assert pad > 0
-        widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
-        self._cache = {
-            "k": jnp.pad(self._cache["k"], widths),
-            "v": jnp.pad(self._cache["v"], widths),
-            "pos": self._cache["pos"],
-        }
+        self._cache = self.adapter.grow(self._cache, new_len) \
+            if self.adapter.grows_with_len else self._cache
         self.pool.grow(new_len)
         self.pool_growths += 1
         if self.verbose:
@@ -224,30 +238,24 @@ class ServeEngine:
     # -- admission + prefill ----------------------------------------------
 
     def _admit(self, req: Request, now: float) -> None:
-        pb = self.router.quantize_prompt(req.prompt_len)
+        pb = self.adapter.prefill_len(req.prompt_len,
+                                      self.router.quantize_prompt)
         toks = np.zeros((1, pb), np.int32)
         toks[0, :req.prompt_len] = req.prompt
+        batch = {"tokens": jnp.asarray(toks),
+                 **self.adapter.prefill_extras(self.model, 1)}
         last = jnp.asarray([req.prompt_len - 1], jnp.int32)
         self.compiled_prefill_shapes.add(pb)
         t0 = time.perf_counter()
-        logits, rcache = self._prefill(self.params,
-                                       {"tokens": jnp.asarray(toks)}, last)
+        logits, rcache = self._prefill(self.params, batch, last)
         logits = jax.block_until_ready(logits)
         self.metrics.add_prefill_time(time.perf_counter() - t0)
 
-        slot = req.slot
-        pad = self.pool.kv_len - rcache["k"].shape[2]
-        assert pad >= 0, "prompt bucket outgrew the pool row"
-        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
-        self._cache["k"] = self._cache["k"].at[:, slot].set(
-            jnp.pad(rcache["k"][:, 0], widths))
-        self._cache["v"] = self._cache["v"].at[:, slot].set(
-            jnp.pad(rcache["v"][:, 0], widths))
-        self._cache["pos"] = self._cache["pos"].at[slot].set(req.prompt_len)
-
+        self._cache = self.adapter.write_row(self._cache, req.slot, rcache,
+                                             req.prompt_len, self.pool.kv_len)
         first = int(jnp.argmax(logits[0, -1]))
         req.generated.append(first)
-        self._tokens[slot, 0] = first
+        self._tokens[req.slot, 0] = first
         t = self._now()
         self.metrics.on_admit(req.rid, now)
         self.metrics.on_first_token(req.rid, t)
@@ -255,10 +263,14 @@ class ServeEngine:
     # -- decode -----------------------------------------------------------
 
     def _decode_tick(self) -> None:
-        self.compiled_decode_shapes.add((self.slots, self.pool.kv_len))
+        self.compiled_decode_shapes.add(self._decode_shape())
+        # the bucket's resolved plan, whose decode_block parameterizes
+        # the step about to run (None for attention-free families)
+        plan = self._current_plan()
         t0 = time.perf_counter()
         logits, self._cache = self._decode(self.params, dict(self._cache),
-                                           jnp.asarray(self._tokens))
+                                           jnp.asarray(self._tokens),
+                                           decode_block=plan.decode_block)
         logits = jax.block_until_ready(logits)
         self.metrics.add_decode_time(time.perf_counter() - t0)
         lg = logits[:, 0] if logits.ndim == 3 else logits
@@ -296,7 +308,7 @@ class ServeEngine:
             # resolve the bucket's tuned kernel plans BEFORE the request
             # joins the pool — the runtime mapping decision of the paper,
             # warm buckets answered by the tuning cache with zero probes
-            self.router.resolve(self.router.bucket(self.pool.kv_len))
+            self._current_plan()
             self._admit(req, now)
 
     def run(self, *, on_complete=None,

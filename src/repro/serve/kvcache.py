@@ -1,10 +1,15 @@
 """Block/paged KV-cache accounting for the serving pool.
 
-The engine's physical cache is the model stack's dense (L, slots, T, G,
-hd) arrays with a per-row ``pos`` vector — ragged cache lengths are
-handled by per-row position masking inside ``models.attention`` (each
-row writes at its own position and masks its own length), so a short
-request never pays attention cost for the pool's max length.
+The engine's physical cache is a family-shaped pytree owned by the
+``CacheAdapter`` layer (``serve.adapters``): dense/MoE/hybrid/enc-dec
+rows are (L, slots, T, ...) arrays whose ragged lengths are handled by
+per-row position masking inside ``models.attention`` (each row writes
+at its own position and masks its own length, so a short request never
+pays attention cost for the pool's max length); ssm rows are
+fixed-shape recurrent states with no time axis at all.  This module is
+deliberately blind to those layouts — it accounts *capacity* in the
+same currency for every family, which is what lets one scheduler and
+one engine loop serve them all.
 
 What lives here is the *management* layer those arrays sit under:
 

@@ -281,8 +281,10 @@ def _sequential_reference(cfg, params, prompts, max_new):
     from repro.launch.steps import make_decode_step, make_prefill_step
     from repro.models import build_model
     from repro.runtime import sharding as shd
+    from repro.serve import get_adapter
 
     model = build_model(cfg)
+    extras = get_adapter(cfg.family).prefill_extras(model, 1)
     mesh = make_local_mesh(1, 1)
     outs = []
     for p in prompts:
@@ -291,8 +293,8 @@ def _sequential_reference(cfg, params, prompts, max_new):
                                 ShapeConfig("serve", max_len, 1, "decode"))
         prefill = jax.jit(make_prefill_step(model, plan, max_len))
         decode = jax.jit(make_decode_step(model, plan))
-        logits, cache = prefill(params,
-                                {"tokens": jnp.asarray([p], jnp.int32)})
+        logits, cache = prefill(
+            params, {"tokens": jnp.asarray([p], jnp.int32), **extras})
         out = [int(jnp.argmax(logits[0, -1]))]
         for _ in range(max_new - 1):
             logits, cache = decode(params, cache,
@@ -328,3 +330,135 @@ def test_engine_matches_sequential_decode(f32_cfg):
     # 4 requests through 2 slots: recycling happened, shapes stayed put
     assert report.compiled_decode_shapes == 1
     assert report.router_stats["probes"] > 0          # cold buckets refined
+
+
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "zamba2-7b",
+                                  "whisper-medium"])
+def test_engine_matches_sequential_decode_families(arch):
+    """The CacheAdapter pool is token-exact for the recurrent, hybrid,
+    and encoder-decoder families too — slot recycling, bucket-padded
+    (or, for ssm, exact-length) prefill, and per-row positions never
+    change anyone's tokens vs the one-request-at-a-time path."""
+    import jax
+
+    from repro.models import build_model
+    from repro.serve import ServeEngine
+
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    prompts = [[7, 3, 99], [11, 5, 2, 42, 17, 101, 9], [250, 1],
+               [33, 44, 55, 66]]
+    max_new = 4
+    params = build_model(cfg).init(jax.random.key(0))
+    ref = _sequential_reference(cfg, params, prompts, max_new)
+
+    eng = ServeEngine(cfg, slots=2, max_len=64, params=params,
+                      tuning_cache=TuningCache(path=None))
+    reqs = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    report = eng.run()
+    assert report.summary.n_completed == len(prompts)
+    for req, p, expected in zip(reqs, prompts, ref):
+        assert report.outputs[req.rid][len(p):] == expected
+    if cfg.is_attention_free:
+        # a length-free cache never recompiles, no matter the traffic
+        assert report.compiled_decode_shapes == 1
+
+
+# --------------------------------------------------------------------------- #
+# The tuned decode_block is consumed by the EXECUTED decode step
+# --------------------------------------------------------------------------- #
+
+
+def test_tuned_decode_block_parameterizes_executed_step(f32_cfg, monkeypatch):
+    """The bucket-resolved ``decode_block`` must reach the attention
+    sweep the engine actually runs — not just sit in the memoized plan."""
+    import jax
+
+    from repro.models import attention as attn_mod
+    from repro.models import build_model
+    from repro.serve import ServeEngine
+
+    seen = []
+    real = attn_mod.blocked_decode_attention
+
+    def spy(*args, **kw):
+        seen.append(int(kw["block"]))
+        return real(*args, **kw)
+
+    monkeypatch.setattr(attn_mod, "blocked_decode_attention", spy)
+    params = build_model(f32_cfg).init(jax.random.key(0))
+    eng = ServeEngine(f32_cfg, slots=2, max_len=64, params=params,
+                      tuning_cache=TuningCache(path=None))
+    eng.submit([1, 2, 3], max_new_tokens=2)
+    report = eng.run()
+    assert report.summary.n_completed == 1
+    plan = eng.router.resolve(eng.router.bucket(eng.pool.kv_len))
+    assert seen, "decode ran without the tuned attention sweep"
+    assert set(seen) == {plan.decode_block}
+
+
+def test_decode_block_changes_executed_step_not_tokens(f32_cfg):
+    """Changing the tuned block changes the compiled kernel invocation
+    (the mapping/schedule) while the math — and thus the tokens — stays
+    fixed: the acceptance criterion that tuning is observable in
+    execution rather than only in the cached decision."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import make_decode_step
+    from repro.models import build_model
+    from repro.runtime import sharding as shd
+    from repro.serve import get_adapter
+
+    model = build_model(f32_cfg)
+    params = model.init(jax.random.key(0))
+    plan = shd.resolve_plan(f32_cfg, make_local_mesh(1, 1),
+                            ShapeConfig("serve", 256, 2, "decode"))
+    step = jax.jit(make_decode_step(model, plan),
+                   static_argnames=("decode_block",))
+    cache = get_adapter(f32_cfg.family).init_pool(model, 2, 256,
+                                                  expand_kv=plan.expand_kv)
+    cache["pos"] = jnp.asarray([5, 9], jnp.int32)
+    toks = jnp.asarray([[3], [4]], jnp.int32)
+
+    hlo = {b: step.lower(params, dict(cache), toks,
+                         decode_block=b).as_text() for b in (128, 256)}
+    assert hlo[128] != hlo[256], \
+        "decode_block did not change the lowered step"
+    l128, _ = step(params, dict(cache), toks, decode_block=128)
+    l256, _ = step(params, dict(cache), toks, decode_block=256)
+    np.testing.assert_allclose(np.asarray(l128), np.asarray(l256),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_block_reaches_pallas_kernel(f32_cfg, monkeypatch):
+    """Under a Pallas-capable mode the tuned block arrives at the actual
+    kernel call (``block_s=``), closing ROADMAP's 'decision only' gap."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import decode_attention as dak
+    from repro.kernels import ops
+    from repro.models import build_model
+    from repro.serve import get_adapter
+
+    seen = []
+    real = dak.decode_attention_pallas
+
+    def spy(*args, **kw):
+        seen.append(int(kw["block_s"]))
+        return real(*args, **kw)
+
+    monkeypatch.setattr(dak, "decode_attention_pallas", spy)
+    model = build_model(f32_cfg)
+    params = model.init(jax.random.key(0))
+    cache = get_adapter(f32_cfg.family).init_pool(model, 1, 128)
+    cache["pos"] = jnp.asarray([6], jnp.int32)
+    with ops.force("interpret"):
+        logits, _ = model.decode_step(params, cache,
+                                      jnp.asarray([[3]], jnp.int32),
+                                      decode_block=128)
+    assert seen and set(seen) == {128}
+    assert np.isfinite(np.asarray(logits)).all()
