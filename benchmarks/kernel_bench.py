@@ -103,6 +103,54 @@ def run(print_fn=print):
             derived = f"block_s={block};ok={ok}"
         rows.append((f"decode_attention[{pol.value}]", us, derived))
         assert ok, ("decode_attention", pol)
+
+    # prefill flash tiles: the EXECUTED serving-prefill mapping (PR 5) —
+    # tuned (block_q, block_k) vs the fixed default, numerics pinned
+    # against the chunked reference sweep
+    from repro.models.attention import (chunked_attention,
+                                        tiled_prefill_attention)
+
+    pq = jax.random.normal(key, (1, 128, 2, 2, 64), jnp.float32)
+    pk = jax.random.normal(jax.random.key(6), (1, 128, 2, 64), jnp.float32)
+    pv = jax.random.normal(jax.random.key(7), (1, 128, 2, 64), jnp.float32)
+    p_expected = np.asarray(chunked_attention(pq, pk, pv, causal=True))
+    p_desc = {"seq_q": 128, "seq_kv": 128, "head_dim": 64,
+              "dtype": "float32", "dtype_bytes": 4, "causal": True}
+    fplan, finfo = resolve_plan("flash_attention", HW, MappingPolicy.TUNED,
+                                p_desc, dcache)
+    for label, (bq, bk) in (
+            ("tuned", (int(fplan.block_q), int(fplan.block_k))),
+            ("fixed", (128, 128))):
+        fn = jax.jit(lambda q_, k_, v_, _bq=bq, _bk=bk:
+                     tiled_prefill_attention(q_, k_, v_, block_q=_bq,
+                                             block_k=_bk, causal=True))
+        got = np.asarray(fn(pq, pk, pv))
+        ok = np.allclose(got, p_expected, rtol=1e-3, atol=1e-3)
+        us = _time(fn, pq, pk, pv)
+        rows.append((f"prefill_flash[{label}]", us,
+                     f"block_q={bq};block_k={bk};ok={ok}"))
+        assert ok, ("prefill_flash", label)
+
+    # paged gather: the block-table read of the physical KV pool — the
+    # Pallas kernel (interpret here) against the jnp.take reference
+    from repro.kernels.paged_gather import paged_gather_pallas, paged_gather_ref
+
+    gb, gt, gbs = 4, 512, 16
+    gcache = jax.random.normal(key, (gb, gt, 2, 64), jnp.float32)
+    gtables = jnp.asarray(
+        np.random.default_rng(0).permutation(gb * (gt // gbs))
+        .reshape(gb, gt // gbs), jnp.int32)
+    g_expected = np.asarray(paged_gather_ref(gcache, gtables, gbs))
+    for label, fn in (
+            ("ref", jax.jit(lambda c, t: paged_gather_ref(c, t, gbs))),
+            ("pallas", jax.jit(lambda c, t: paged_gather_pallas(
+                c, t, gbs, interpret=True)))):
+        got = np.asarray(fn(gcache, gtables))
+        ok = np.array_equal(got, g_expected)
+        us = _time(fn, gcache, gtables)
+        rows.append((f"paged_gather[{label}]", us,
+                     f"blocks={gb * (gt // gbs)};block={gbs};ok={ok}"))
+        assert ok, ("paged_gather", label)
     ops.set_force_mode("auto")
 
     # mapper decisions for the record

@@ -30,7 +30,15 @@ Acceptance (asserted):
   * all five families (dense, moe, ssm, hybrid, encdec) complete their
     whole request mix through the ragged pool, steady-state tokens/s
     reported per family (``serve_family[...]`` rows — CI extracts them
-    into the ``serve-family-matrix`` workflow artifact).
+    into the ``serve-family-matrix`` workflow artifact);
+  * paged (physical block tables) and copying (slot-contiguous) slot
+    recycling produce IDENTICAL tokens on identical traffic — the
+    gather is a pure copy (``serve_recycle[...]`` rows report both
+    sides' tok/s);
+  * tuned and default (GSPMD) executed prefill both drain the full mix;
+    the ``serve_prefill[...]`` rows report the TTFT gap (logits parity
+    is tolerance-pinned in tests, not bit-asserted here: the sweeps
+    reduce in different float orders).
 
     PYTHONPATH=src python -m benchmarks.serve_bench
 """
@@ -102,6 +110,72 @@ def _family_matrix(print_fn) -> dict:
     return out
 
 
+#: recycle-heavy mix: 2 slots x 12 requests forces constant slot churn,
+#: the regime where paged re-pointing vs full-row copying diverges
+_RECYCLE_BASE = dict(n_requests=12, rate=400.0, mode="open",
+                     prompt_dist=("uniform", 8, 48),
+                     output_dist=("uniform", 2, 6), vocab=512)
+RECYCLE_WARMUP = TrafficConfig(seed=4, **_RECYCLE_BASE)
+RECYCLE_MEASURED = TrafficConfig(seed=5, **_RECYCLE_BASE)
+
+
+def _paged_vs_copying(cfg, params, print_fn) -> dict:
+    """Slot recycling with physical block tables (scatter/gather through
+    the lease's table) vs the copying layout (full-row writes into the
+    recycled slot) on identical traffic.  Tokens must match exactly —
+    paging is a layout, never math."""
+    out, tokens = {}, {}
+    for name, paged in (("copying", False), ("paged", True)):
+        eng = ServeEngine(cfg, slots=2, max_len=MAX_LEN, params=params,
+                          paged=paged, tuning_cache=TuningCache(path=None))
+        drive(eng, RECYCLE_WARMUP)
+        eng.reset()
+        report = drive(eng, RECYCLE_MEASURED)
+        s = report.summary
+        assert s.n_completed == RECYCLE_MEASURED.n_requests, \
+            f"recycle[{name}]: requests starved"
+        print_fn(
+            f"serve_recycle[{name}],"
+            f"{s.decode_s * 1e6 / max(s.decode_steps, 1):.0f},"
+            f"tok_s={s.tokens_per_s:.1f};prefill_ms={s.prefill_s * 1e3:.0f};"
+            f"ttft_p50_ms={s.ttft_p50_s * 1e3:.0f};"
+            f"util={s.utilization:.2f}")
+        out[name] = s.tokens_per_s
+        tokens[name] = sorted(report.outputs.values())
+    assert tokens["paged"] == tokens["copying"], \
+        "physical paging changed tokens"
+    return out
+
+
+def _prefill_tile_ttft(cfg, params, print_fn) -> dict:
+    """Executed bucket-tuned prefill tiles vs the GSPMD default path on
+    identical traffic: the TTFT side of the tuned-plan -> executed-kernel
+    story.  The two sweeps reduce in different float orders, so logits
+    parity is pinned with tolerances by tests/test_paged_prefill.py —
+    here we assert only that both engines drain the full mix (greedy
+    argmax CAN legitimately flip a near-tie token between orders)."""
+    out = {}
+    for name, tiles in (("tuned", True), ("default", False)):
+        eng = ServeEngine(cfg, slots=SLOTS, max_len=MAX_LEN, params=params,
+                          use_prefill_tiles=tiles,
+                          tuning_cache=TuningCache(path=None))
+        drive(eng, WARMUP)
+        eng.reset()
+        report = drive(eng, MEASURED)
+        s = report.summary
+        assert s.n_completed == MEASURED.n_requests, \
+            f"prefill[{name}]: requests starved"
+        print_fn(
+            f"serve_prefill[{name}],"
+            f"{s.prefill_s * 1e6 / max(s.n_completed, 1):.0f},"
+            f"ttft_p50_ms={s.ttft_p50_s * 1e3:.0f};"
+            f"ttft_p95_ms={s.ttft_p95_s * 1e3:.0f};"
+            f"prefill_ms={s.prefill_s * 1e3:.0f};"
+            f"tok_s={s.tokens_per_s:.1f}")
+        out[name] = s.ttft_p50_s
+    return out
+
+
 def _steady_state(name, cfg, params, spec, admission, print_fn):
     eng = ServeEngine(cfg, slots=SLOTS, max_len=MAX_LEN, params=params,
                       spec=spec, admission=admission,
@@ -160,6 +234,9 @@ def run(print_fn=print) -> dict:
     assert bucketed.compiled_decode_shapes < naive.compiled_decode_shapes, \
         "bucketing must keep the compile set smaller than per-shape dispatch"
 
+    recycle = _paged_vs_copying(cfg, params, print_fn)
+    prefill = _prefill_tile_ttft(cfg, params, print_fn)
+
     families = _family_matrix(print_fn)
     assert set(families) == {f for f, _ in FAMILY_MATRIX}
 
@@ -170,6 +247,8 @@ def run(print_fn=print) -> dict:
         "warm_bucket_probes": bprobes,
         "bucketed_decode_shapes": bucketed.compiled_decode_shapes,
         "naive_decode_shapes": naive.compiled_decode_shapes,
+        "recycle_tok_s": recycle,
+        "prefill_ttft_p50_s": prefill,
         "family_tok_s": families,
     }
 

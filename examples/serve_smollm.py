@@ -4,7 +4,12 @@ pool's throughput — runnable in reduced mode on CPU.
 
 The engine admits ragged prompts into a 2-slot decode pool, recycles
 slots as requests finish, and resolves each shape bucket's kernel plans
-through the runtime tuner (zero-probe once the bucket is warm).
+through the runtime tuner (zero-probe once the bucket is warm).  The
+resolved plans are EXECUTED end to end, not just recorded: the prompt
+bucket's flash tiles parameterize the prefill that runs, the pool
+bucket's cache block parameterizes the decode sweep, and with
+``paged=True`` (below) the KV pool is physically paged — slot recycling
+re-points block tables instead of copying cache rows.
 
     PYTHONPATH=src python examples/serve_smollm.py
 """
@@ -14,7 +19,8 @@ import numpy as np
 from repro.serve import ServeEngine
 
 rng = np.random.default_rng(0)
-engine = ServeEngine("smollm-135m", slots=2, max_len=128, reduced=True)
+engine = ServeEngine("smollm-135m", slots=2, max_len=128, reduced=True,
+                     paged=True)
 
 reqs = []
 for i, (plen, out_len) in enumerate([(5, 12), (12, 6), (3, 10), (20, 4),

@@ -1,6 +1,9 @@
 """repro.kernels — Pallas TPU kernels (pl.pallas_call + BlockSpec) with
 runtime-resolved mappings, jit'd wrappers (ops, routed through the
-repro.tuner dispatch layer) and pure-jnp oracles (ref)."""
+repro.tuner dispatch layer) and pure-jnp oracles (ref).  Per-kernel
+reference (signatures, tuned decisions, legality, parity):
+docs/KERNELS.md.  ``paged_gather`` holds the block-table indirection
+read for the serving pool's physical KV paging."""
 
 from repro.kernels import ops, ref
 

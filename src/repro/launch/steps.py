@@ -200,13 +200,19 @@ def make_prefill_step(model: Model, plan: Plan, max_len: Optional[int],
     length — the serving engine pads rows to the pool length on insert, so
     one jitted prefill serves every prompt bucket.  ``last_pos`` (B,)
     selects each row's true final-token logits for right-padded prompts
-    (defaults to the fixed-batch position -1 behaviour)."""
+    (defaults to the fixed-batch position -1 behaviour).
+
+    ``prefill_tiles`` — the router-resolved flash (block_q, block_k) —
+    is meant to be jitted as a STATIC argument: a new tile pair is a new
+    prompt bucket, and bucket changes are the (lattice-bounded) compile
+    events.  ``None`` keeps the GSPMD prefill path byte-identical."""
     ctx = make_ctx(plan)
     ctx.flags.update(flags or {})
 
-    def prefill_step(params, batch, last_pos=None):
+    def prefill_step(params, batch, last_pos=None, prefill_tiles=None):
         ml = max_len if max_len is not None else batch["tokens"].shape[1]
-        return model.prefill(params, batch, ml, last_pos=last_pos, ctx=ctx)
+        return model.prefill(params, batch, ml, last_pos=last_pos,
+                             prefill_tiles=prefill_tiles, ctx=ctx)
 
     return prefill_step
 
@@ -217,12 +223,17 @@ def make_decode_step(model: Model, plan: Plan,
     serving engine threads from ``BucketRouter`` into the executed step;
     jit it as a static argument (a new block is a new bucket, and bucket
     changes are the compile events the lattice bounds).  ``None`` keeps
-    the plain einsum decode path."""
+    the plain einsum decode path.  ``page_tables`` (a traced (B, nb)
+    array — live tables change every admission) + ``page_block`` (static)
+    switch the KV caches to the physical block-table layout."""
     ctx = make_ctx(plan)
     ctx.flags.update(flags or {})
 
-    def decode_step(params, cache, tokens, decode_block=None):
+    def decode_step(params, cache, tokens, decode_block=None,
+                    page_tables=None, page_block=None):
         return model.decode_step(params, cache, tokens, ctx=ctx,
-                                 decode_block=decode_block)
+                                 decode_block=decode_block,
+                                 page_tables=page_tables,
+                                 page_block=page_block)
 
     return decode_step

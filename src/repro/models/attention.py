@@ -294,6 +294,123 @@ def triangular_attention(
     return jnp.moveaxis(outs, 0, 1).reshape(b, s, g, r, d)
 
 
+def tiled_prefill_attention(
+    q: jax.Array,                 # (B, Sq, G, R, D)
+    k: jax.Array,                 # (B, Sk, G, D)
+    v: jax.Array,
+    *,
+    block_q: int,
+    block_k: int,
+    causal: bool = True,
+    window=None,                  # int | traced scalar | None
+    prefix_len=None,              # int | None
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Blocked prefill flash sweep EXECUTING the tuned (block_q, block_k).
+
+    The reference realization of the bucket-resolved prefill mapping on
+    platforms without the Pallas kernel: queries are tiled into
+    ``block_q`` rows (outer ``lax.scan``) and keys into ``block_k``
+    columns (inner scan with running online-softmax stats), so both tile
+    decisions change the lowered loop structure — the grid the tuner
+    decided — while the math is the flash recurrence, identical to
+    ``chunked_attention``.  Forward-only (prefill; training keeps the
+    custom-VJP flash path)."""
+    b, s, g, r, d = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    bq = max(1, min(int(block_q), s))
+    bk = max(1, min(int(block_k), sk))
+    sp, skp = -(-s // bq) * bq, -(-sk // bk) * bk
+    if sp != s:
+        q = jnp.pad(q, ((0, 0), (0, sp - s)) + ((0, 0),) * 3)
+    if skp != sk:
+        pad = ((0, 0), (0, skp - sk), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    nq, nk = sp // bq, skp // bk
+    win = jnp.asarray(window if window is not None else jnp.inf, jnp.float32)
+    pre = jnp.asarray(prefix_len if prefix_len is not None else -1.0,
+                      jnp.float32)
+    qf = q.astype(jnp.float32).reshape(b, nq, bq, g, r, d) * scale
+    kc = jnp.moveaxis(k.astype(jnp.float32).reshape(b, nk, bk, g, d), 1, 0)
+    vc = jnp.moveaxis(v.astype(jnp.float32).reshape(b, nk, bk, g, d), 1, 0)
+
+    def q_block(_, qi):
+        qb = jax.lax.dynamic_index_in_dim(qf, qi, 1, keepdims=False)
+        q_pos = qi * bq + jnp.arange(bq) + q_offset
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kb, vb, ci = xs
+            sc = jnp.einsum("bsgrd,bcgd->bsgrc", qb, kb)
+            k_pos = ci * bk + jnp.arange(bk)
+            ok = _mask_dyn(q_pos[:, None], k_pos[None, :], causal=causal,
+                           window=win, prefix=pre)
+            ok &= (k_pos < sk)[None, :]            # key-padding columns
+            sc = jnp.where(ok[None, :, None, None, :], sc, _NEG)
+            m_new = jnp.maximum(m, jnp.max(sc, -1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(jnp.isfinite(sc),
+                          jnp.exp(sc - m_safe[..., None]), 0.0)
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            return (m_new, l * alpha + jnp.sum(p, -1),
+                    acc * alpha[..., None]
+                    + jnp.einsum("bsgrc,bcgd->bsgrd", p, vb)), None
+
+        init = (jnp.full((b, bq, g, r), _NEG, jnp.float32),
+                jnp.zeros((b, bq, g, r), jnp.float32),
+                jnp.zeros((b, bq, g, r, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init,
+                                      (kc, vc, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return 0, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, 0, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sp, g, r, d)
+    return out[:, :s] if sp != s else out
+
+
+def pallas_prefill_attention(
+    q: jax.Array,                 # (B, S, G, R, D)
+    k: jax.Array,                 # (B, S, G, D)
+    v: jax.Array,
+    *,
+    block_q: int,
+    block_k: int,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Run the Pallas flash kernel with the tuned (block_q, block_k) over
+    the grouped prefill layout: one kernel instance per (batch, kv-group,
+    q-head) row, the K/V rows shared across a group's R q-heads — the
+    executed form of the serving router's per-bucket prefill plan."""
+    from repro.core.hw import detect
+    from repro.core.mapper import MappingPolicy, attention_plan_for_blocks
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    hw = detect()
+    s, d = q.shape[1], q.shape[-1]
+    plan = attention_plan_for_blocks(s, k.shape[1], d, hw, int(block_q),
+                                     int(block_k), MappingPolicy.TUNED,
+                                     dtype_bytes=q.dtype.itemsize)
+    qt = q.transpose(0, 2, 3, 1, 4)                       # (B, G, R, S, D)
+    kt = jnp.moveaxis(k, 2, 1)                            # (B, G, S, D)
+    vt = jnp.moveaxis(v, 2, 1)
+
+    def one(q_row, k_row, v_row):
+        return flash_attention_pallas(q_row, k_row, v_row, hw=hw,
+                                      causal=causal, scale=scale, plan=plan,
+                                      interpret=interpret)
+
+    per_r = jax.vmap(one, in_axes=(0, None, None))        # R (K/V shared)
+    per_g = jax.vmap(per_r, in_axes=(0, 0, 0))            # G
+    per_b = jax.vmap(per_g, in_axes=(0, 0, 0))            # B
+    out = per_b(qt, kt, vt)                               # (B, G, R, S, D)
+    return out.transpose(0, 3, 1, 2, 4)
+
+
 def decode_attention_grouped(
     q: jax.Array,                 # (B, G, R, D) — one new token
     k_cache: jax.Array,           # (B, T, G, D)
@@ -471,15 +588,36 @@ def attention_block(
     q_offset: int = 0,
     kv_override: Optional[tuple[jax.Array, jax.Array]] = None,
     banded: bool = False,
+    prefill_tiles: Optional[tuple[int, int]] = None,
     ctx: ShardCtx,
 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
-    """Returns (output (B,S,D), (k, v) for caching)."""
+    """Returns (output (B,S,D), (k, v) for caching).
+
+    ``prefill_tiles`` is the bucket-tuned flash (block_q, block_k)
+    resolved by the serving router: when given, the attention EXECUTES
+    at that mapping — the Pallas flash kernel where available, otherwise
+    the tile-honouring blocked reference sweep.  ``None`` keeps the
+    hardware-agnostic GSPMD path (training and non-serving callers)."""
     b, s, _ = x.shape
     q, k, v = _project_qkv(params, x, cfg, cos, sin, ctx)
     if kv_override is not None:
         k, v = kv_override
     if banded:
         o = banded_attention(q, k, v, window=int(window))
+    elif prefill_tiles is not None and kv_override is None:
+        bq, bk = prefill_tiles
+        use_pallas, interpret = _pallas_mode()
+        if (use_pallas and causal and window is None
+                and prefix_len is None and q_offset == 0):
+            o = pallas_prefill_attention(q, k, v, block_q=bq, block_k=bk,
+                                         causal=causal, interpret=interpret)
+        else:
+            # dynamic windows / prefix-LM masks stay on the reference
+            # sweep, which honours the same tile schedule
+            o = tiled_prefill_attention(q, k, v, block_q=bq, block_k=bk,
+                                        causal=causal, window=window,
+                                        prefix_len=prefix_len,
+                                        q_offset=q_offset)
     elif (ctx.flag("triangular_causal", False) and causal
           and window is None and prefix_len is None and q_offset == 0
           and kv_override is None):
@@ -502,12 +640,37 @@ def attention_block(
 KV_INT8_SCALE = 32.0
 
 
-def _cache_write(cache, new, pos):
+def _cache_write(cache, new, pos, *, page_tables=None, page_block=None):
+    """Write one new (B, G, D) KV row at per-row positions ``pos``.
+
+    With ``page_tables`` (B, nb) the write is PHYSICAL: each row's
+    position routes through its block table to a scatter at the leased
+    block's flat offset (``kernels.paged_gather`` documents the pid ->
+    location mapping), and rows whose table entry is unmapped (-1 — a
+    retired slot) or whose position overruns the table write NOTHING
+    (out-of-range scatter indices drop), so recycled blocks are never
+    touched by their previous tenant."""
     if cache.dtype == jnp.int8:
         new = jnp.clip(jnp.round(new.astype(jnp.float32) * KV_INT8_SCALE),
                        -127, 127)
     new = new.astype(cache.dtype)
     pos = jnp.asarray(pos)
+    if page_tables is not None:
+        from repro.kernels.paged_gather import flat_position
+
+        b, t = cache.shape[:2]
+        bs = int(page_block)
+        nb = page_tables.shape[1]
+        new = new[:, 0] if new.ndim == cache.ndim else new   # drop S=1 axis
+        pos = jnp.broadcast_to(pos, (b,)) if pos.ndim == 0 else pos
+        bi = jnp.clip(pos // bs, 0, nb - 1)
+        pid = page_tables[jnp.arange(b), bi]                  # (B,)
+        valid = (pid >= 0) & (pos // bs < nb) & (pos < t)
+        flat = flat_position(pid, pos, b, t, bs)
+        flat = jnp.where(valid, flat, b * t)      # OOB scatter index: drop
+        flat_cache = cache.reshape((b * t,) + cache.shape[2:])
+        flat_cache = flat_cache.at[flat].set(new, mode="drop")
+        return flat_cache.reshape(cache.shape)
     if pos.ndim == 1:
         # ragged pool (serving): each row writes at its OWN position.  A
         # one-hot select instead of per-row dynamic slices keeps the write
@@ -538,6 +701,8 @@ def attention_decode(
     sin=None,
     window: Optional[int] = None,
     decode_block: Optional[int] = None,
+    page_tables=None,             # (B, nb) int32 | None — physical paging
+    page_block: Optional[int] = None,
     ctx: ShardCtx,
 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
     """One-token decode; returns (out (B,1,D), updated caches).
@@ -551,14 +716,30 @@ def attention_decode(
     given, the attention sweep EXECUTES at that mapping — the Pallas
     flash-decode kernel where available, otherwise the blocked reference
     sweep with the same schedule.  ``None`` keeps the plain einsum path
-    (GSPMD-distributable; the non-serving callers)."""
+    (GSPMD-distributable; the non-serving callers).
+
+    ``page_tables`` switches the cache to PHYSICAL paging: the (B, T)
+    arrays become a block grid, writes scatter through each row's block
+    table, and the sweep reads a gather-by-block-table logical view
+    (Pallas gather kernel on TPU, ``jnp.take`` reference elsewhere), so
+    slot recycling re-points blocks instead of copying cache rows."""
     b = x.shape[0]
     q, k, v = _project_qkv(params, x, cfg, cos, sin, ctx)
     # write the new kv at position `pos` (quantizing if the cache is int8)
-    k_cache = _cache_write(k_cache, k, pos)
-    v_cache = _cache_write(v_cache, v, pos)
+    k_cache = _cache_write(k_cache, k, pos, page_tables=page_tables,
+                           page_block=page_block)
+    v_cache = _cache_write(v_cache, v, pos, page_tables=page_tables,
+                           page_block=page_block)
     kr = _cache_read(k_cache, x.dtype)
     vr = _cache_read(v_cache, x.dtype)
+    if page_tables is not None:
+        from repro.kernels.paged_gather import paged_gather
+
+        use_pallas, interpret = _pallas_mode()
+        kr = paged_gather(kr, page_tables, int(page_block),
+                          use_pallas=use_pallas, interpret=interpret)
+        vr = paged_gather(vr, page_tables, int(page_block),
+                          use_pallas=use_pallas, interpret=interpret)
     clen = pos + 1
     if decode_block is None:
         o = decode_attention_grouped(q[:, 0], kr, vr, clen, window=window)

@@ -95,8 +95,14 @@ def encode(params: dict, frames: jax.Array, cfg: ModelConfig, *,
 
 def encdec_forward(params: dict, tokens: jax.Array, frames: jax.Array,
                    cfg: ModelConfig, *, remat: str = "none",
-                   return_cache: bool = False, ctx: ShardCtx):
-    """Teacher-forced decode over `tokens` given encoder `frames`."""
+                   return_cache: bool = False, prefill_tiles=None,
+                   ctx: ShardCtx):
+    """Teacher-forced decode over `tokens` given encoder `frames`.
+
+    ``prefill_tiles`` parameterizes the executed decoder self-attention
+    (the length that buckets in serving); the encoder and the
+    cross-attention run at the static ``encoder_tokens`` length and keep
+    the GSPMD path."""
     enc = encode(params, frames, cfg, remat=remat, ctx=ctx)
     x = embed(params["embed"], tokens)
     x = ctx.p(x, "batch", "seq_sp", "embed")
@@ -107,7 +113,8 @@ def encdec_forward(params: dict, tokens: jax.Array, frames: jax.Array,
         lp = opt_barrier(lp)
         h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
         a, kv = attention_block(lp["attn"], h, cfg, cos=cos, sin=sin,
-                                causal=True, ctx=ctx)
+                                causal=True, prefill_tiles=prefill_tiles,
+                                ctx=ctx)
         x = ctx.p(x + a, "batch", "seq_sp", "embed")
         ck, cv = _cross_kv(lp["cross"], enc)
         h = rmsnorm(x, lp["ln_x"], cfg.norm_eps)
@@ -149,12 +156,13 @@ def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
 
 def encdec_decode(params: dict, cache: dict, tokens: jax.Array,
                   cfg: ModelConfig, *, ctx: ShardCtx,
-                  decode_block=None):
+                  decode_block=None, page_tables=None, page_block=None):
     """One decoder step.  ``cache["pos"]`` may be a scalar (fixed batch)
     or a (B,) vector (the serving pool's ragged rows); ``decode_block``
     is the bucket-tuned attention sweep mapping (see
     ``attention.attention_decode``).  Cross-attention KV is static per
-    request, so only self-attention consumes the tuned block."""
+    request, so only self-attention consumes the tuned block — and only
+    the self-attention caches page under ``page_tables``."""
     x = embed(params["embed"], tokens)
     pos = cache["pos"]
     rope_pos = pos[:, None] if pos.ndim else pos[None]
@@ -165,7 +173,9 @@ def encdec_decode(params: dict, cache: dict, tokens: jax.Array,
         h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
         a, (kc, vc) = attention_decode(lp["attn"], h, cfg, kc, vc, pos,
                                        cos=cos, sin=sin,
-                                       decode_block=decode_block, ctx=ctx)
+                                       decode_block=decode_block,
+                                       page_tables=page_tables,
+                                       page_block=page_block, ctx=ctx)
         x = x + a
         h = rmsnorm(x, lp["ln_x"], cfg.norm_eps)
         x = x + _cross_attn(lp["cross"], h, ck, cv, cfg, ctx)

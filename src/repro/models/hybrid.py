@@ -55,10 +55,11 @@ def _group(tree, ng: int, k: int):
     return jax.tree.map(lambda a: a.reshape(ng, k, *a.shape[1:]), tree)
 
 
-def _shared_attn(shared, x, cfg, cos, sin, ctx):
+def _shared_attn(shared, x, cfg, cos, sin, ctx, prefill_tiles=None):
     h = rmsnorm(x, shared["ln1"], cfg.norm_eps)
     a, kv = attention_block(shared["attn"], h, cfg, cos=cos, sin=sin,
-                            causal=True, ctx=ctx)
+                            causal=True, prefill_tiles=prefill_tiles,
+                            ctx=ctx)
     x = ctx.p(x + a, "batch", "seq_sp", "embed")
     h = rmsnorm(x, shared["ln2"], cfg.norm_eps)
     x = x + mlp(shared["mlp"], h, cfg.mlp_act, ctx)
@@ -67,6 +68,7 @@ def _shared_attn(shared, x, cfg, cos, sin, ctx):
 
 def hybrid_forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
                    remat: str = "none", return_cache: bool = False,
+                   prefill_tiles: tuple[int, int] | None = None,
                    ctx: ShardCtx, chunk: int | None = None):
     ng, k = n_groups(cfg), cfg.hybrid_attn_every
     x = embed(params["embed"], tokens)
@@ -78,7 +80,8 @@ def hybrid_forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
 
     def group_body(x, xs):
         gp, gf = opt_barrier(xs)
-        x, kv = _shared_attn(params["shared"], x, cfg, cos, sin, ctx)
+        x, kv = _shared_attn(params["shared"], x, cfg, cos, sin, ctx,
+                             prefill_tiles=prefill_tiles)
 
         def layer_body(x, ls):
             lp, active = ls
@@ -129,11 +132,13 @@ def hybrid_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
 
 def hybrid_decode(params: dict, cache: dict, tokens: jax.Array,
                   cfg: ModelConfig, *, ctx: ShardCtx,
-                  decode_block=None):
+                  decode_block=None, page_tables=None, page_block=None):
     """One decode step.  ``cache["pos"]`` may be a scalar (fixed batch)
     or a (B,) vector (the serving pool's ragged rows); ``decode_block``
-    is the bucket-tuned attention sweep mapping (see
-    ``attention.attention_decode``)."""
+    is the bucket-tuned attention sweep mapping and ``page_tables``/
+    ``page_block`` the physical block-table layout for the shared
+    attention caches (see ``attention.attention_decode``); the ssm
+    states are position-free and never page."""
     ng, k = n_groups(cfg), cfg.hybrid_attn_every
     x = embed(params["embed"], tokens)
     pos = cache["pos"]
@@ -149,7 +154,9 @@ def hybrid_decode(params: dict, cache: dict, tokens: jax.Array,
         h = rmsnorm(x, params["shared"]["ln1"], cfg.norm_eps)
         a, (kc, vc) = attention_decode(params["shared"]["attn"], h, cfg,
                                        kc, vc, pos, cos=cos, sin=sin,
-                                       decode_block=decode_block, ctx=ctx)
+                                       decode_block=decode_block,
+                                       page_tables=page_tables,
+                                       page_block=page_block, ctx=ctx)
         x = x + a
         h = rmsnorm(x, params["shared"]["ln2"], cfg.norm_eps)
         x = x + mlp(params["shared"]["mlp"], h, cfg.mlp_act, ctx)

@@ -82,26 +82,39 @@ class Model:
 
     # ------------------------------------------------------------------ #
     def forward(self, params, batch: dict, *, remat: str = "none",
-                return_cache: bool = False, ctx: ShardCtx = NO_SHARD):
+                return_cache: bool = False,
+                prefill_tiles: Optional[tuple[int, int]] = None,
+                ctx: ShardCtx = NO_SHARD):
+        """Family-dispatched forward.  ``prefill_tiles`` — the serving
+        router's bucket-tuned flash (block_q, block_k) — parameterizes
+        the EXECUTED attention mapping for the attention families;
+        ``None`` (and the attention-free ssm family) keeps the
+        hardware-agnostic GSPMD path byte-for-byte."""
         cfg, f = self.cfg, self.cfg.family
         tokens = batch["tokens"]
         if f in ("dense", "moe"):
             return tf_mod.forward(params, tokens, cfg, remat=remat,
-                                  return_cache=return_cache, ctx=ctx)
+                                  return_cache=return_cache,
+                                  prefill_tiles=prefill_tiles, ctx=ctx)
         if f == "vlm":
             return tf_mod.forward(params, tokens, cfg, remat=remat,
                                   prefix_embeds=batch["patches"],
-                                  return_cache=return_cache, ctx=ctx)
+                                  return_cache=return_cache,
+                                  prefill_tiles=prefill_tiles, ctx=ctx)
         if f == "ssm":
             return ssm_mod.ssm_forward(params, tokens, cfg, remat=remat,
                                        return_cache=return_cache, ctx=ctx)
         if f == "hybrid":
             return hybrid_mod.hybrid_forward(params, tokens, cfg, remat=remat,
-                                             return_cache=return_cache, ctx=ctx)
+                                             return_cache=return_cache,
+                                             prefill_tiles=prefill_tiles,
+                                             ctx=ctx)
         if f == "encdec":
             return encdec_mod.encdec_forward(params, tokens, batch["frames"],
                                              cfg, remat=remat,
-                                             return_cache=return_cache, ctx=ctx)
+                                             return_cache=return_cache,
+                                             prefill_tiles=prefill_tiles,
+                                             ctx=ctx)
         raise ValueError(f)
 
     def loss(self, params, batch: dict, *, remat: str = "none",
@@ -141,17 +154,26 @@ class Model:
         raise ValueError(f)
 
     def prefill(self, params, batch: dict, max_len: int, *,
-                last_pos=None, ctx: ShardCtx = NO_SHARD):
+                last_pos=None,
+                prefill_tiles: Optional[tuple[int, int]] = None,
+                ctx: ShardCtx = NO_SHARD):
         """Run the prompt, return (last-token logits, primed cache).
 
         ``last_pos`` (B,) selects each row's TRUE final-token logits when
         prompts are right-padded to a shape bucket (the serving engine's
         admission path); ``None`` keeps the fixed-batch behaviour of
-        reading position -1."""
+        reading position -1.
+
+        ``prefill_tiles`` is the bucket-tuned flash (block_q, block_k)
+        from ``serve.buckets.BucketRouter.prefill_tiles``: the attention
+        sweep EXECUTES at that mapping (Pallas flash kernel where
+        available, tile-honouring blocked reference elsewhere); ``None``
+        keeps the GSPMD path for non-serving callers."""
         cfg, f = self.cfg, self.cfg.family
         tokens = batch["tokens"]
         b, s = tokens.shape
-        out = self.forward(params, batch, return_cache=True, ctx=ctx)
+        out = self.forward(params, batch, return_cache=True,
+                           prefill_tiles=prefill_tiles, ctx=ctx)
         logits, _, caches = out
         if f in ("dense", "moe", "vlm"):
             k, v = caches                       # (L, B, S', G, hd)
@@ -192,25 +214,26 @@ class Model:
         return logits[:, -1:], cache
 
     def decode_step(self, params, cache, tokens, *, ctx: ShardCtx = NO_SHARD,
-                    decode_block: Optional[int] = None):
+                    decode_block: Optional[int] = None,
+                    page_tables=None, page_block: Optional[int] = None):
         """One decode step.  ``decode_block`` is the bucket-tuned
         decode-attention cache block resolved by the serving router; it
         selects the *executed* attention sweep (Pallas kernel or blocked
         reference — see ``attention.attention_decode``).  ``None`` keeps
-        the plain einsum path; attention-free families ignore it."""
+        the plain einsum path; attention-free families ignore it.
+        ``page_tables`` (B, nb) + ``page_block`` switch the KV caches to
+        the physical block-table layout (serving's paged pool)."""
         cfg, f = self.cfg, self.cfg.family
+        kw = dict(ctx=ctx, decode_block=decode_block,
+                  page_tables=page_tables, page_block=page_block)
         if f in ("dense", "moe", "vlm"):
-            return tf_mod.decode_step(params, cache, tokens, cfg, ctx=ctx,
-                                      decode_block=decode_block)
+            return tf_mod.decode_step(params, cache, tokens, cfg, **kw)
         if f == "ssm":
-            return ssm_mod.ssm_decode(params, cache, tokens, cfg, ctx=ctx,
-                                      decode_block=decode_block)
+            return ssm_mod.ssm_decode(params, cache, tokens, cfg, **kw)
         if f == "hybrid":
-            return hybrid_mod.hybrid_decode(params, cache, tokens, cfg,
-                                            ctx=ctx, decode_block=decode_block)
+            return hybrid_mod.hybrid_decode(params, cache, tokens, cfg, **kw)
         if f == "encdec":
-            return encdec_mod.encdec_decode(params, cache, tokens, cfg,
-                                            ctx=ctx, decode_block=decode_block)
+            return encdec_mod.encdec_decode(params, cache, tokens, cfg, **kw)
         raise ValueError(f)
 
     # ------------------------------------------------------------------ #

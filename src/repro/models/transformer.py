@@ -80,14 +80,15 @@ def _layer_window(cfg: ModelConfig, is_global):
 
 def _block_fwd(layer_params, x, cfg: ModelConfig, *, is_global, cos_l, sin_l,
                cos_g, sin_g, prefix_len, q_offset, kv_override=None,
-               causal=True, ctx: ShardCtx):
+               causal=True, prefill_tiles=None, ctx: ShardCtx):
     cos = jnp.where(is_global, cos_g, cos_l) if cfg.local_global_ratio else cos_g
     sin = jnp.where(is_global, sin_g, sin_l) if cfg.local_global_ratio else sin_g
     h = rmsnorm(x, layer_params["ln1"], cfg.norm_eps)
     a, kv = attention_block(
         layer_params["attn"], h, cfg, cos=cos, sin=sin, causal=causal,
         window=_layer_window(cfg, is_global), prefix_len=prefix_len,
-        q_offset=q_offset, kv_override=kv_override, ctx=ctx)
+        q_offset=q_offset, kv_override=kv_override,
+        prefill_tiles=prefill_tiles, ctx=ctx)
     x = ctx.p(x + a, "batch", "seq_sp", "embed")
     h = rmsnorm(x, layer_params["ln2"], cfg.norm_eps)
     m, aux = _mlp_or_moe(layer_params, cfg, h, ctx)
@@ -103,9 +104,15 @@ def forward(
     prefix_embeds: Optional[jax.Array] = None,   # (B, P, D) VLM stub
     remat: str = "none",                  # none | full | dots
     return_cache: bool = False,
+    prefill_tiles: Optional[tuple[int, int]] = None,
     ctx: ShardCtx = NO_SHARD,
 ):
-    """Training/prefill forward.  Returns (logits, aux_loss[, kv caches])."""
+    """Training/prefill forward.  Returns (logits, aux_loss[, kv caches]).
+
+    ``prefill_tiles`` — the serving router's bucket-tuned flash
+    (block_q, block_k) — makes every layer's attention EXECUTE at that
+    mapping (see ``attention.attention_block``); ``None`` keeps the
+    GSPMD path."""
     if (ctx.flag("banded_local", False) and cfg.local_global_ratio
             and cfg.window and prefix_embeds is None):
         return forward_banded(params, tokens, cfg, remat=remat,
@@ -129,7 +136,8 @@ def forward(
         x, kv, a = _block_fwd(layer_params, x, cfg, is_global=is_global,
                               cos_l=cos_l, sin_l=sin_l, cos_g=cos_g,
                               sin_g=sin_g, prefix_len=prefix_len,
-                              q_offset=0, ctx=ctx)
+                              q_offset=0, prefill_tiles=prefill_tiles,
+                              ctx=ctx)
         return (x, aux + a), (kv if return_cache else None)
 
     if remat == "full":
@@ -273,6 +281,8 @@ def decode_step(
     *,
     ctx: ShardCtx = NO_SHARD,
     decode_block: Optional[int] = None,
+    page_tables=None,
+    page_block: Optional[int] = None,
 ):
     """One greedy decode step: (logits (B,1,V), updated cache).
 
@@ -282,7 +292,9 @@ def decode_step(
 
     ``decode_block`` — the bucket-tuned cache block from the serving
     router — selects the executed attention sweep (see
-    ``attention.attention_decode``); ``None`` keeps the einsum path."""
+    ``attention.attention_decode``); ``None`` keeps the einsum path.
+    ``page_tables``/``page_block`` switch the KV arrays to the physical
+    block-table layout (scatter writes, gather-by-table reads)."""
     x = embed(params["embed"], tokens)
     x = ctx.p(x, "batch", None, "embed")
     pos = cache["pos"]
@@ -300,7 +312,7 @@ def decode_step(
         a, (k_c, v_c) = attention_decode(
             layer_params["attn"], h, cfg, k_c, v_c, pos,
             cos=cos, sin=sin, window=win, decode_block=decode_block,
-            ctx=ctx)
+            page_tables=page_tables, page_block=page_block, ctx=ctx)
         x = x + a
         h = rmsnorm(x, layer_params["ln2"], cfg.norm_eps)
         m, _ = _mlp_or_moe(layer_params, cfg, h, ctx)

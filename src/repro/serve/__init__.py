@@ -8,11 +8,14 @@ the thing that picks each shape bucket's kernel plans:
   ``buckets``    quantize live geometry onto a bounded lattice; route
                  each bucket through ``tuner.resolve_plan`` (per-bucket
                  ``WorkloadSignature``, zero-probe warm hits); thread
-                 the resolved ``decode_block`` into the executed step,
+                 the resolved ``decode_block`` AND the prompt bucket's
+                 ``prefill_tiles`` into the executed steps,
   ``adapters``   the CacheAdapter layer: per-family decode-cache state
                  (init / row writes / growth) behind one interface, so
                  all five families ride the same ragged pool,
-  ``kvcache``    block/slot accounting under the ragged pool arrays,
+  ``kvcache``    block/slot accounting under the ragged pool arrays —
+                 physical under ``ServeEngine(paged=True)``: leases
+                 export block tables the kernels scatter/gather through,
   ``scheduler``  FIFO queue + admission control + slot recycling,
   ``engine``     the prefill/decode interleaving loop itself,
   ``traffic``    synthetic Poisson workloads (open/closed loop),

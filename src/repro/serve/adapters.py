@@ -44,7 +44,14 @@ __all__ = ["CacheAdapter", "FamilyCacheAdapter", "ADAPTERS", "get_adapter"]
 class CacheAdapter(Protocol):
     """What the engine (and the accounting layer under it) asks of a
     family's decode-cache state.  Implementations must be pure: every
-    mutator returns a new cache pytree."""
+    mutator returns a new cache pytree.
+
+    Example::
+
+        adapter = get_adapter(cfg.family)
+        cache = adapter.init_pool(model, slots=4, kv_len=64)
+        cache = adapter.write_row(cache, slot, row_cache, plen, kv_len)
+    """
 
     family: str
     #: keys whose arrays carry the pool's time axis (L, B, T, ...) and
@@ -57,25 +64,49 @@ class CacheAdapter(Protocol):
     prefill_buckets: bool
 
     def init_pool(self, model: Any, slots: int, kv_len: int, *,
-                  expand_kv: bool = False) -> dict: ...
+                  expand_kv: bool = False) -> dict:
+        """Build the pool cache with a per-row ``pos`` vector."""
+        ...
 
     def prefill_len(self, prompt_len: int,
-                    quantize: Callable[[int], int]) -> int: ...
+                    quantize: Callable[[int], int]) -> int:
+        """The length a prompt pads to before prefill (bucket or exact)."""
+        ...
 
-    def prefill_extras(self, model: Any, rows: int) -> dict: ...
+    def prefill_extras(self, model: Any, rows: int) -> dict:
+        """Family-specific prefill inputs (e.g. encoder frames)."""
+        ...
 
     def write_row(self, cache: dict, slot: int, row_cache: dict,
-                  prompt_len: int, kv_len: int) -> dict: ...
+                  prompt_len: int, kv_len: int,
+                  page_map: Optional[Any] = None) -> dict:
+        """Scatter one prefilled request's cache into its leased slot
+        (through ``page_map`` when the pool is physically paged)."""
+        ...
 
-    def grow(self, cache: dict, new_len: int) -> dict: ...
+    def grow(self, cache: dict, new_len: int) -> dict:
+        """Pad the pool's length-bearing arrays to a new bucket."""
+        ...
 
     @property
-    def grows_with_len(self) -> bool: ...
+    def grows_with_len(self) -> bool:
+        """False for recurrent caches: growth is accounting-only."""
+        ...
 
 
 @dataclasses.dataclass(frozen=True)
 class FamilyCacheAdapter:
-    """Generic ``CacheAdapter`` over dict-of-(L, batch, ...) caches."""
+    """Generic ``CacheAdapter`` over dict-of-(L, batch, ...) caches.
+
+    One implementation serves every family because the families differ
+    only in *which* keys carry a time axis (``length_keys``) and whether
+    prompt padding is safe (``prefill_buckets`` — see module docstring).
+
+    Example::
+
+        ssm = FamilyCacheAdapter("ssm", length_keys=(),
+                                 prefill_buckets=False)
+    """
 
     family: str
     length_keys: tuple[str, ...] = ("k", "v")
@@ -88,29 +119,50 @@ class FamilyCacheAdapter:
 
     def init_pool(self, model, slots: int, kv_len: int, *,
                   expand_kv: bool = False) -> dict:
+        """The family's decode cache with a per-row (ragged) ``pos``."""
         cache = model.init_cache(slots, kv_len, expand_kv=expand_kv,
                                  cache_dtype=None)
         cache["pos"] = jnp.zeros((slots,), jnp.int32)   # per-row, ragged
         return cache
 
     def prefill_len(self, prompt_len: int, quantize) -> int:
+        """Prompt bucket when masking makes padding safe, else exact."""
         return quantize(prompt_len) if self.prefill_buckets else prompt_len
 
     def prefill_extras(self, model, rows: int) -> dict:
+        """Extra prefill batch entries (``{}`` for most families)."""
         return self.extras(model, rows) if self.extras else {}
 
     def write_row(self, cache: dict, slot: int, row_cache: dict,
-                  prompt_len: int, kv_len: int) -> dict:
+                  prompt_len: int, kv_len: int, page_map=None) -> dict:
         """Scatter a single-row prefill cache into the pool at ``slot``.
         Length-bearing keys are right-padded from the prompt bucket to
         the pool row; everything else (recurrent states, cross KV) lands
         shape-exact.  The row's ``pos`` becomes the true prompt length —
-        the mask/rope boundary, regardless of padding."""
+        the mask/rope boundary, regardless of padding.
+
+        ``page_map`` (prompt_len,) — flat physical positions from the
+        request's block table — switches the length-bearing keys to the
+        PAGED write: only the prompt's own tokens scatter into the
+        leased blocks (no full-row copy, no tail padding; positions past
+        the prompt are masked by ``pos`` until decode overwrites them).
+
+        Example::
+
+            cache = adapter.write_row(cache, lease.slot, row_cache,
+                                      len(prompt), pool.kv_len)
+        """
         out = dict(cache)
         for key, arr in row_cache.items():
             if key == "pos":
                 continue
             row = arr[:, 0]                        # (L, ...) single row
+            if key in self.length_keys and page_map is not None:
+                n, b, t = out[key].shape[0], out[key].shape[1], kv_len
+                flat = out[key].reshape((n, b * t) + out[key].shape[3:])
+                flat = flat.at[:, page_map].set(row[:, :prompt_len])
+                out[key] = flat.reshape(out[key].shape)
+                continue
             if key in self.length_keys:
                 pad = kv_len - row.shape[1]
                 assert pad >= 0, "prompt bucket outgrew the pool row"
@@ -156,6 +208,14 @@ ADAPTERS: dict[str, CacheAdapter] = {
 
 
 def get_adapter(family: str) -> CacheAdapter:
+    """The registered ``CacheAdapter`` for a model family; raises
+    ``NotImplementedError`` with the served set for absent families.
+
+    Example::
+
+        >>> get_adapter("dense").family
+        'dense'
+    """
     try:
         return ADAPTERS[family]
     except KeyError:

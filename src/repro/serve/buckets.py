@@ -53,6 +53,11 @@ class BucketSpec:
     ``linear`` multiples of ``quantum`` — finer, O(max/quantum) buckets;
     ``exact``  identity (every shape its own bucket; unbounded compiles);
     ``fixed``  everything maps to ``max_len`` (one max-shape bucket).
+
+    Example::
+
+        >>> BucketSpec(min_len=32, max_len=256).quantize(100)
+        128
     """
 
     min_len: int = 32
@@ -110,12 +115,19 @@ class BucketSpec:
 
 @dataclasses.dataclass(frozen=True)
 class Bucket:
-    """One lattice point: a decode-pool geometry."""
+    """One lattice point: a decode-pool geometry.
+
+    Example::
+
+        >>> Bucket(slots=4, kv_len=128).covers(2, 100)
+        True
+    """
 
     slots: int
     kv_len: int
 
     def covers(self, batch: int, need_len: int) -> bool:
+        """True when this geometry can hold (batch, need_len)."""
         return batch <= self.slots and need_len <= self.kv_len
 
 
@@ -126,13 +138,23 @@ class BucketPlan:
     ``decode_block`` is not a record: the engine threads it into the
     executed decode step (``Model.decode_step(decode_block=...)``), so
     the bucket decision changes the attention sweep that actually runs.
-    Both fields are ``None`` for attention-free families."""
+    Both fields are ``None`` for attention-free families.
+
+    Example::
+
+        plan = router.resolve(router.bucket(need_len))
+        logits, cache = decode(params, cache, toks,
+                               decode_block=plan.decode_block)
+    """
 
     bucket: Bucket
     sig: WorkloadSignature
     decode_block: Optional[int]        # decode_attention cache block
     decode_info: Optional[ResolveInfo]
-    prefill_blocks: Optional[tuple]    # flash (block_q, block_k) | None
+    #: flash (block_q, block_k) at the bucket's kv_len geometry — the
+    #: per-bucket record; the tiles the prefill EXECUTES are resolved at
+    #: the prompt bucket via ``BucketRouter.prefill_tiles``
+    prefill_blocks: Optional[tuple]
     prefill_info: Optional[ResolveInfo]
 
     @property
@@ -146,7 +168,15 @@ class KernelRow:
     """One row of the router's kernel-spec table: which dispatcher
     kernel a bucket resolves, when it applies, how its workload desc is
     built from the bucket geometry, and which decision variables the
-    plan contributes to ``BucketPlan``."""
+    plan contributes to ``BucketPlan``.
+
+    Example::
+
+        KernelRow(kernel="decode_attention",
+                  applies=lambda cfg: not cfg.is_attention_free,
+                  desc=lambda cfg, b, db: {"s": b.kv_len, ...},
+                  extract=lambda plan: int(plan))
+    """
 
     kernel: str                                        # KERNEL_REGISTRY name
     applies: Any                                       # (cfg) -> bool
@@ -178,7 +208,13 @@ KERNEL_TABLE: tuple[KernelRow, ...] = (
 
 @dataclasses.dataclass
 class RouterStats:
-    """Per-router dispatch accounting (serve_bench asserts on these)."""
+    """Per-router dispatch accounting (serve_bench asserts on these).
+
+    Example::
+
+        >>> RouterStats().probes
+        0
+    """
 
     cold: int = 0            # resolutions that consulted the tuner
     warm: int = 0            # served from the router's own plan table
@@ -194,6 +230,12 @@ class BucketRouter:
     bucket's kernel mappings through ``tuner.resolve_plan`` — so the
     decision flow (Eq. 1 seed -> cache -> refine -> memoize) and the
     zero-probe warm-hit guarantee are inherited, not reimplemented.
+
+    Example::
+
+        router = BucketRouter(cfg, BucketSpec(max_len=256), slots=4)
+        plan = router.resolve(router.bucket(need_len))
+        tiles = router.prefill_tiles(router.quantize_prompt(plen))
     """
 
     def __init__(self, cfg: ModelConfig, spec: BucketSpec, *,
@@ -211,13 +253,16 @@ class BucketRouter:
         self.store = store
         self.stats = RouterStats()
         self._plans: dict[str, BucketPlan] = {}
+        self._prefill_tiles: dict[int, tuple[int, int]] = {}
 
     # -- lattice ----------------------------------------------------------
 
     def bucket(self, need_len: int) -> Bucket:
+        """The lattice point covering a pool-length requirement."""
         return Bucket(self.slots, self.spec.quantize(need_len))
 
     def quantize_prompt(self, prompt_len: int) -> int:
+        """The prompt bucket a prefill pads to (same lattice)."""
         return self.spec.quantize(prompt_len)
 
     # -- resolution -------------------------------------------------------
@@ -232,6 +277,9 @@ class BucketRouter:
             kv_heads=max(self.cfg.num_kv_heads, 1),
             head_dim=self.cfg.head_dim,
             layers=self.cfg.num_layers)
+
+    def _dtype_bytes(self) -> int:
+        return 2 if self.cfg.dtype == "bfloat16" else 4
 
     def _resolve_kernel(self, kernel: str, desc: dict):
         kw = {}
@@ -255,7 +303,7 @@ class BucketRouter:
             self.stats.warm += 1
             return hit
         self.stats.cold += 1
-        db = 2 if self.cfg.dtype == "bfloat16" else 4
+        db = self._dtype_bytes()
         values: dict[str, Any] = {}
         infos: dict[str, Optional[ResolveInfo]] = {}
         for row in KERNEL_TABLE:
@@ -273,3 +321,35 @@ class BucketRouter:
                           prefill_info=infos["flash_attention"])
         self._plans[sig.key] = plan
         return plan
+
+    def prefill_tiles(self, prompt_bucket: int) -> Optional[tuple[int, int]]:
+        """The EXECUTED prefill mapping for one prompt bucket: the flash
+        (block_q, block_k) the engine jits into ``prefill_step`` as a
+        static argument, resolved through the tuner at the prompt
+        bucket's own (seq, seq) geometry and memoized per length — so a
+        warm prompt bucket is a dict hit with zero probes, exactly like
+        the decode plans.  ``None`` for attention-free families (there
+        is no flash sweep to map).
+
+        Example::
+
+            tiles = router.prefill_tiles(router.quantize_prompt(plen))
+            logits, cache = prefill(params, batch, last, prefill_tiles=tiles)
+        """
+        row = next(r for r in KERNEL_TABLE if r.kernel == "flash_attention")
+        if not row.applies(self.cfg):
+            return None
+        hit = self._prefill_tiles.get(prompt_bucket)
+        if hit is not None:
+            self.stats.warm += 1
+            return hit
+        self.stats.cold += 1
+        # reuse the table row's declarative desc at the prompt bucket's
+        # own (pb, pb) geometry — one source of truth for the flash desc
+        plan, _ = self._resolve_kernel(
+            row.kernel,
+            row.desc(self.cfg, Bucket(self.slots, prompt_bucket),
+                     self._dtype_bytes()))
+        tiles = row.extract(plan)
+        self._prefill_tiles[prompt_bucket] = tiles
+        return tiles

@@ -64,7 +64,13 @@ __all__ = ["ServeEngine", "ServeReport"]
 
 @dataclasses.dataclass
 class ServeReport:
-    """Everything one engine run produced."""
+    """Everything one engine run produced.
+
+    Example::
+
+        report = engine.run()
+        print(report.summary.tokens_per_s, report.outputs)
+    """
 
     summary: ServeSummary
     outputs: dict[int, list[int]]          # rid -> prompt + generated
@@ -82,7 +88,22 @@ class ServeEngine:
     ``arch`` is a registered config name or a ready ``ModelConfig``.
     ``reduced`` applies only to names — a ``ModelConfig`` is served
     exactly as given (callers shrinking a config do it explicitly, e.g.
-    ``get_config(n).reduced()``)."""
+    ``get_config(n).reduced()``).
+
+    ``paged=True`` makes KV paging PHYSICAL: each lease's block ids
+    become an indirection table threaded into the decode step, writes
+    scatter into leased blocks, reads gather by table, and admission
+    after recycling re-points blocks instead of copying cache rows.
+    ``use_prefill_tiles=False`` drops the bucket-tuned prefill flash
+    tiles back to the GSPMD path (the tuned-vs-default ablation
+    ``benchmarks/serve_bench.py`` measures).
+
+    Example::
+
+        eng = ServeEngine("smollm-135m", slots=4, max_len=256, paged=True)
+        eng.submit([1, 2, 3], max_new_tokens=8)
+        report = eng.run()
+    """
 
     def __init__(self, arch: str | ModelConfig, *,
                  slots: int = 4,
@@ -99,6 +120,8 @@ class ServeEngine:
                  params=None,
                  block_size: int = 16,
                  total_blocks: Optional[int] = None,
+                 paged: bool = False,
+                 use_prefill_tiles: bool = True,
                  eos_id: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic,
                  verbose: bool = False):
@@ -135,7 +158,30 @@ class ServeEngine:
         self._block_size = block_size
         self._total_blocks = total_blocks
         self._admission = admission
+        self.paged = paged
+        self.use_prefill_tiles = use_prefill_tiles
         kv0 = self.spec.quantize(1)
+        if paged:
+            # the physical grid maps block ids onto (slot, offset) pairs:
+            # EVERY lattice length must be whole blocks (a non-multiple
+            # would only surface at the mid-run growth that hits it), and
+            # the budget may undersubscribe the grid (admission control)
+            # but never exceed it (ids past the grid have no location)
+            lattice = self.spec.lattice()
+            if not lattice:          # "exact" mode: unbounded lengths
+                raise ValueError(
+                    "paged mode needs a finite length lattice; "
+                    "mode='exact' cannot guarantee block-multiple rows")
+            for n in lattice:
+                if n % block_size:
+                    raise ValueError(
+                        f"paged mode needs lattice lengths divisible by "
+                        f"block_size={block_size}, got {n}")
+            cap0 = slots * (kv0 // block_size)
+            if total_blocks is not None and total_blocks > cap0:
+                raise ValueError(
+                    f"paged mode: total_blocks={total_blocks} exceeds the "
+                    f"physical block grid ({cap0})")
         self.pool = KVCachePool(slots, kv0, block_size=block_size,
                                 total_blocks=total_blocks,
                                 max_len=self.spec.max_len)
@@ -143,13 +189,20 @@ class ServeEngine:
         self.metrics = ServeMetrics()
         self.outputs: dict[int, list[int]] = {}
 
-        self._prefill = jax.jit(make_prefill_step(self.model, self.plan, None))
-        # decode_block is static: a new block is a new bucket, and bucket
-        # steps are the (lattice-bounded) compile events
+        # prefill_tiles is static: a new tile pair is a new prompt
+        # bucket, and bucket steps are the (lattice-bounded) compile
+        # events; same for decode_block / page_block on the decode side
+        self._prefill = jax.jit(make_prefill_step(self.model, self.plan, None),
+                                static_argnames=("prefill_tiles",))
         self._decode = jax.jit(make_decode_step(self.model, self.plan),
-                               static_argnames=("decode_block",))
+                               static_argnames=("decode_block",
+                                                "page_block"))
         self._cache = self.adapter.init_pool(self.model, slots, kv0,
                                              expand_kv=self.plan.expand_kv)
+        self._tables = np.full((slots, self.pool.max_blocks_per_row), -1,
+                               np.int32)
+        self._tables_dev = None      # device-array memo (tables are data
+        #                              but change only at admit/retire)
         self._tokens = np.zeros((slots, 1), np.int32)
         self._plan_len = -1                  # _current_plan memo key
         self._bucket_plan = None
@@ -173,6 +226,9 @@ class ServeEngine:
         self.outputs = {}
         self._cache = self.adapter.init_pool(self.model, self.slots, kv0,
                                              expand_kv=self.plan.expand_kv)
+        self._tables = np.full((self.slots, self.pool.max_blocks_per_row),
+                               -1, np.int32)
+        self._tables_dev = None
         self._tokens = np.zeros((self.slots, 1), np.int32)
         self.pool_growths = 0
         self._t0 = None
@@ -210,12 +266,28 @@ class ServeEngine:
         return self._bucket_plan
 
     def _grow_pool(self, new_len: int) -> None:
+        if self.paged and new_len % self._block_size:
+            raise ValueError(f"paged pool length {new_len} not a multiple "
+                             f"of block_size={self._block_size}")
         self._cache = self.adapter.grow(self._cache, new_len) \
             if self.adapter.grows_with_len else self._cache
         self.pool.grow(new_len)
         self.pool_growths += 1
         if self.verbose:
             print(f"[serve] pool -> ({self.slots}, {new_len})")
+
+    def _page_map(self, blocks: list[int], n: int) -> jax.Array:
+        """Flat physical positions of one request's first ``n`` logical
+        tokens (the prefill write path; ``kernels.paged_gather``
+        documents the pid -> location mapping)."""
+        from repro.kernels.paged_gather import flat_position
+
+        bs = self._block_size
+        tok = np.arange(n)
+        pid = np.asarray(blocks, np.int64)[tok // bs]
+        return jnp.asarray(
+            flat_position(pid, tok, self.slots, self.pool.kv_len, bs),
+            jnp.int32)
 
     # -- intake -----------------------------------------------------------
 
@@ -246,13 +318,25 @@ class ServeEngine:
                  **self.adapter.prefill_extras(self.model, 1)}
         last = jnp.asarray([req.prompt_len - 1], jnp.int32)
         self.compiled_prefill_shapes.add(pb)
+        # the prompt bucket's EXECUTED flash tiles — resolved by the
+        # router (warm buckets: memo hit, zero probes), jitted static
+        tiles = self.router.prefill_tiles(pb) if self.use_prefill_tiles \
+            else None
         t0 = time.perf_counter()
-        logits, rcache = self._prefill(self.params, batch, last)
+        logits, rcache = self._prefill(self.params, batch, last,
+                                       prefill_tiles=tiles)
         logits = jax.block_until_ready(logits)
         self.metrics.add_prefill_time(time.perf_counter() - t0)
 
+        pm = None
+        if self.paged:
+            blocks = self.pool.lease(req.rid).blocks
+            self._tables[req.slot] = self.pool.block_table(req.rid)
+            self._tables_dev = None
+            pm = self._page_map(blocks, req.prompt_len)
         self._cache = self.adapter.write_row(self._cache, req.slot, rcache,
-                                             req.prompt_len, self.pool.kv_len)
+                                             req.prompt_len,
+                                             self.pool.kv_len, page_map=pm)
         first = int(jnp.argmax(logits[0, -1]))
         req.generated.append(first)
         self._tokens[req.slot, 0] = first
@@ -267,10 +351,20 @@ class ServeEngine:
         # the bucket's resolved plan, whose decode_block parameterizes
         # the step about to run (None for attention-free families)
         plan = self._current_plan()
+        kw = {}
+        if self.paged and self.adapter.grows_with_len:
+            # live block tables are DATA (they change at admit/retire,
+            # so the device upload is memoized, not per-tick); the block
+            # size is the static layout constant
+            if self._tables_dev is None:
+                self._tables_dev = jnp.asarray(self._tables)
+            kw = dict(page_tables=self._tables_dev,
+                      page_block=self._block_size)
         t0 = time.perf_counter()
         logits, self._cache = self._decode(self.params, dict(self._cache),
                                            jnp.asarray(self._tokens),
-                                           decode_block=plan.decode_block)
+                                           decode_block=plan.decode_block,
+                                           **kw)
         logits = jax.block_until_ready(logits)
         self.metrics.add_decode_time(time.perf_counter() - t0)
         lg = logits[:, 0] if logits.ndim == 3 else logits
@@ -290,7 +384,11 @@ class ServeEngine:
             eos = self.eos_id is not None and req.generated \
                 and req.generated[-1] == self.eos_id
             if req.done or eos:
+                slot = req.slot
                 self.scheduler.finish(req)
+                if self.paged and slot is not None:
+                    self._tables[slot] = -1      # unmap: blocks recycle
+                    self._tables_dev = None
                 self.outputs[req.rid] = list(req.prompt) + list(req.generated)
                 self.metrics.on_done(req.rid, now, len(req.generated))
                 if on_complete is not None:
@@ -336,6 +434,8 @@ class ServeEngine:
         return self.report()
 
     def report(self) -> ServeReport:
+        """Snapshot the run's ``ServeReport`` (also returned by
+        ``run``); callable any time, including mid-run."""
         s = self.metrics.summary()
         if self.verbose:
             print(f"[serve] {self.cfg.name}: {s.n_completed}/{s.n_requests} "

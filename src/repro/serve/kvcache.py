@@ -24,10 +24,19 @@ What lives here is the *management* layer those arrays sit under:
     admission (slot AND blocks, atomically), retirement, and pool
     growth when the length bucket steps up.
 
-Physical paging (scatter-indexed block tables inside the kernels) is
-intentionally out of scope: rows stay slot-contiguous so the dense
-model caches keep working, while admission/recycling semantics are the
-real paged-KV ones.
+Paging is PHYSICAL when the engine runs with ``paged=True``: the block
+ids this module hands out become real cache locations via the
+column-major grid mapping
+
+    pid  ->  (slot row = pid % slots, offset = (pid // slots) * block_size)
+
+(column-major so pool growth appends new ids without remapping live
+blocks), ``KVCachePool.block_table`` exports each lease as a
+logical->physical indirection row, and the kernels scatter writes /
+gather reads through it (``models.attention._cache_write``,
+``kernels.paged_gather``).  With ``paged=False`` the same accounting
+runs admission/recycling over slot-contiguous rows — the ids are then
+currency only.
 """
 
 from __future__ import annotations
@@ -39,11 +48,19 @@ __all__ = ["BlockAllocator", "KVCachePool", "Lease"]
 
 
 def ceil_div(a: int, b: int) -> int:
+    """Ceiling integer division."""
     return -(-a // b)
 
 
 class BlockAllocator:
-    """Fixed pool of KV blocks with per-request ownership tracking."""
+    """Fixed pool of KV blocks with per-request ownership tracking.
+
+    Example::
+
+        >>> a = BlockAllocator(num_blocks=8, block_size=16)
+        >>> a.alloc(rid=0, tokens=40)
+        [7, 6, 5]
+    """
 
     def __init__(self, num_blocks: int, block_size: int):
         if num_blocks <= 0 or block_size <= 0:
@@ -59,9 +76,11 @@ class BlockAllocator:
         return len(self._free)
 
     def blocks_for(self, tokens: int) -> int:
+        """Blocks needed to cover ``tokens`` KV positions."""
         return ceil_div(max(tokens, 1), self.block_size)
 
     def can_alloc(self, tokens: int) -> bool:
+        """True when the free list covers ``tokens`` positions."""
         return self.blocks_for(tokens) <= len(self._free)
 
     def alloc(self, rid: int, tokens: int) -> list[int]:
@@ -87,6 +106,7 @@ class BlockAllocator:
         return blocks
 
     def holders(self) -> dict[int, list[int]]:
+        """Snapshot of rid -> held block ids (copies, not views)."""
         return {r: list(bs) for r, bs in self._held.items()}
 
     def add_blocks(self, n: int) -> None:
@@ -110,7 +130,13 @@ class BlockAllocator:
 
 @dataclasses.dataclass
 class Lease:
-    """What one live request holds: a slot row + its KV blocks."""
+    """What one live request holds: a slot row + its KV blocks.
+
+    Example::
+
+        lease = pool.admit(req.rid, req.projected_len)
+        table_row = lease.blocks            # logical -> physical ids
+    """
 
     rid: int
     slot: int
@@ -119,7 +145,15 @@ class Lease:
 
 
 class KVCachePool:
-    """Slot + block bookkeeping for the engine's decode pool."""
+    """Slot + block bookkeeping for the engine's decode pool.
+
+    Example::
+
+        pool = KVCachePool(slots=4, kv_len=64, block_size=16)
+        if pool.fits(projected):
+            lease = pool.admit(rid, projected)
+        pool.retire(rid)
+    """
 
     def __init__(self, slots: int, kv_len: int, *, block_size: int = 16,
                  total_blocks: Optional[int] = None,
@@ -167,6 +201,8 @@ class KVCachePool:
     # -- admission / retirement ------------------------------------------
 
     def admit(self, rid: int, projected_len: int) -> Lease:
+        """Seat a request: a slot + blocks for ``projected_len``,
+        atomically (raises without mutating when either is short)."""
         if not self._free_slots:
             raise MemoryError("no free slot")
         self._require_row(projected_len)
@@ -179,6 +215,7 @@ class KVCachePool:
         return lease
 
     def retire(self, rid: int) -> Lease:
+        """Release ``rid``'s slot + blocks back to the pool."""
         lease = self._leases.pop(rid)
         self.allocator.release(rid)
         del self._by_slot[lease.slot]
@@ -186,9 +223,40 @@ class KVCachePool:
         return lease
 
     def lease(self, rid: int) -> Lease:
+        """The live ``Lease`` held by request ``rid`` (KeyError if not
+        live).
+
+        Example::
+
+            blocks = pool.lease(req.rid).blocks
+        """
         return self._leases[rid]
 
+    @property
+    def max_blocks_per_row(self) -> int:
+        """Block-table width covering the pool's maximum row length."""
+        return ceil_div(self.max_len, self.block_size)
+
+    def block_table(self, rid: int, width: Optional[int] = None) -> list[int]:
+        """Request ``rid``'s logical->physical block indirection row:
+        entry j is the physical block id backing logical positions
+        ``[j*block_size, (j+1)*block_size)``, padded with -1 (unmapped)
+        to ``width`` (default ``max_blocks_per_row``) so every live row
+        shares one static table shape.
+
+        Example::
+
+            table = np.asarray([pool.block_table(r) for r in rids])
+        """
+        width = width if width is not None else self.max_blocks_per_row
+        blocks = self._leases[rid].blocks
+        if len(blocks) > width:
+            raise ValueError(f"lease holds {len(blocks)} blocks, table "
+                             f"width {width}")
+        return list(blocks) + [-1] * (width - len(blocks))
+
     def slot_owner(self, slot: int) -> Optional[int]:
+        """The rid leasing ``slot``, or ``None`` when it is free."""
         return self._by_slot.get(slot)
 
     def grow(self, new_len: int, extra_blocks: Optional[int] = None) -> None:

@@ -18,7 +18,13 @@ __all__ = ["RequestRecord", "StepRecord", "ServeSummary", "ServeMetrics",
 
 
 def percentile(values: list[float], q: float) -> float:
-    """Linear-interpolated percentile, dependency-free; 0.0 on empty."""
+    """Linear-interpolated percentile, dependency-free; 0.0 on empty.
+
+    Example::
+
+        >>> percentile([1.0, 2.0, 3.0], 50)
+        2.0
+    """
     if not values:
         return 0.0
     v = sorted(values)
@@ -32,6 +38,14 @@ def percentile(values: list[float], q: float) -> float:
 
 @dataclasses.dataclass
 class RequestRecord:
+    """One request's canonical serving marks (seconds, engine clock).
+
+    Example::
+
+        rec = engine.metrics.records[req.rid]
+        print(rec.ttft, rec.tpot)
+    """
+
     rid: int
     prompt_tokens: int
     arrival: float
@@ -42,12 +56,14 @@ class RequestRecord:
 
     @property
     def ttft(self) -> Optional[float]:
+        """Time to first token (arrival -> first token), or None."""
         if self.first_token is None:
             return None
         return self.first_token - self.arrival
 
     @property
     def queue_wait(self) -> Optional[float]:
+        """Seconds spent queued before admission, or None."""
         if self.admitted is None:
             return None
         return self.admitted - self.arrival
@@ -63,6 +79,8 @@ class RequestRecord:
 
 @dataclasses.dataclass
 class StepRecord:
+    """One decode tick: timestamp + live/total slot occupancy."""
+
     t: float
     live: int
     slots: int
@@ -70,6 +88,14 @@ class StepRecord:
 
 @dataclasses.dataclass
 class ServeSummary:
+    """Aggregated run metrics (the ``report.summary`` payload).
+
+    Example::
+
+        s = engine.run().summary
+        print(f"{s.tokens_per_s:.1f} tok/s, ttft p50 {s.ttft_p50_s}s")
+    """
+
     n_requests: int
     n_completed: int
     prompt_tokens: int
@@ -87,11 +113,21 @@ class ServeSummary:
     decode_s: float
 
     def as_dict(self) -> dict:
+        """Plain-dict form (JSON-friendly, benchmark CSV rows)."""
         return dataclasses.asdict(self)
 
 
 class ServeMetrics:
-    """Collects request marks + step counters; summarizes on demand."""
+    """Collects request marks + step counters; summarizes on demand.
+
+    Example::
+
+        m = ServeMetrics()
+        m.on_submit(rid=0, t=0.0, prompt_tokens=7)
+        m.on_admit(0, 0.1); m.on_first_token(0, 0.2)
+        m.on_done(0, 0.5, output_tokens=8)
+        summary = m.summary()
+    """
 
     def __init__(self):
         self.records: dict[int, RequestRecord] = {}
@@ -109,20 +145,24 @@ class ServeMetrics:
     # -- request marks ----------------------------------------------------
 
     def on_submit(self, rid: int, t: float, prompt_tokens: int) -> None:
+        """Record a request's arrival."""
         self.records[rid] = RequestRecord(rid=rid,
                                           prompt_tokens=prompt_tokens,
                                           arrival=t)
         self._touch(t)
 
     def on_admit(self, rid: int, t: float) -> None:
+        """Record admission (end of queue wait)."""
         self.records[rid].admitted = t
         self._touch(t)
 
     def on_first_token(self, rid: int, t: float) -> None:
+        """Record the first generated token (the TTFT mark)."""
         self.records[rid].first_token = t
         self._touch(t)
 
     def on_done(self, rid: int, t: float, output_tokens: int) -> None:
+        """Record completion + the request's output token count."""
         r = self.records[rid]
         r.done = t
         r.output_tokens = output_tokens
@@ -131,18 +171,23 @@ class ServeMetrics:
     # -- engine counters --------------------------------------------------
 
     def on_step(self, t: float, live: int, slots: int) -> None:
+        """Record one decode tick's slot occupancy (utilization)."""
         self.steps.append(StepRecord(t, live, slots))
         self._touch(t)
 
     def add_prefill_time(self, dt: float) -> None:
+        """Accumulate wall seconds spent in prefill calls."""
         self.prefill_s += dt
 
     def add_decode_time(self, dt: float) -> None:
+        """Accumulate wall seconds spent in decode steps."""
         self.decode_s += dt
 
     # -- summary ----------------------------------------------------------
 
     def summary(self) -> ServeSummary:
+        """Fold all marks into a ``ServeSummary`` (pure; callable any
+        time)."""
         recs = list(self.records.values())
         done = [r for r in recs if r.done is not None]
         ttfts = [r.ttft for r in recs if r.ttft is not None]

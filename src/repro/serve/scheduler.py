@@ -43,7 +43,13 @@ _rid_counter = itertools.count()
 
 @dataclasses.dataclass
 class Request:
-    """One serving request plus its runtime bookkeeping."""
+    """One serving request plus its runtime bookkeeping.
+
+    Example::
+
+        req = Request(prompt=[1, 2, 3], max_new_tokens=8, arrival=0.0)
+        engine.submit(req)
+    """
 
     prompt: list[int]
     max_new_tokens: int
@@ -71,7 +77,15 @@ class Request:
 
 
 class Scheduler:
-    """FIFO admission + slot recycling over a ``KVCachePool``."""
+    """FIFO admission + slot recycling over a ``KVCachePool``.
+
+    Example::
+
+        sched = Scheduler(pool, mode="continuous")
+        sched.submit(req); sched.poll(now)
+        for r in sched.admissible():
+            ...  # prefill + seat r
+    """
 
     def __init__(self, pool: KVCachePool, *, mode: str = "continuous",
                  max_queue: Optional[int] = None):
@@ -143,6 +157,7 @@ class Scheduler:
         return list(self._live.values())
 
     def live_by_slot(self) -> dict[int, Request]:
+        """slot -> live request (the decode tick's row map)."""
         return {r.slot: r for r in self._live.values()}
 
     @property

@@ -32,6 +32,14 @@ __all__ = ["TrafficConfig", "sample_length", "synthesize", "drive"]
 
 @dataclasses.dataclass(frozen=True)
 class TrafficConfig:
+    """One synthetic traffic pattern (seeded, deterministic).
+
+    Example::
+
+        cfg = TrafficConfig(n_requests=16, rate=8.0, seed=1)
+        report = drive(engine, cfg)
+    """
+
     n_requests: int = 32
     rate: float = 8.0                       # open-loop arrivals/s
     prompt_dist: tuple = ("uniform", 4, 48)
@@ -49,6 +57,13 @@ class TrafficConfig:
 
 
 def sample_length(dist: tuple, rng: random.Random) -> int:
+    """Draw one length from a ``(kind, a, b)`` distribution triple.
+
+    Example::
+
+        >>> sample_length(("fixed", 8, 0), random.Random(0))
+        8
+    """
     kind, a, b = dist
     if kind == "fixed":
         return max(1, int(a))
@@ -62,7 +77,12 @@ def sample_length(dist: tuple, rng: random.Random) -> int:
 def synthesize(cfg: TrafficConfig) -> list[Request]:
     """A deterministic request timeline.  Open loop stamps Poisson
     arrival times; closed loop stamps everything at t=0 and lets
-    ``drive`` meter the release."""
+    ``drive`` meter the release.
+
+    Example::
+
+        reqs = synthesize(TrafficConfig(n_requests=4, seed=7))
+    """
     rng = random.Random(cfg.seed)
     t = 0.0
     out = []
@@ -85,6 +105,10 @@ def drive(engine, cfg: TrafficConfig,
     future arrivals until their timestamps).  Closed loop submits the
     first ``concurrency`` requests and releases one more per completion,
     timestamped at the completion instant.
+
+    Example::
+
+        report = drive(engine, TrafficConfig(n_requests=16, rate=8.0))
     """
     reqs = requests if requests is not None else synthesize(cfg)
     if cfg.mode == "open":

@@ -44,7 +44,12 @@ __all__ = ["CacheStats", "TuningCache", "default_cache_path", "file_lock"]
 
 
 def default_cache_path() -> str:
-    """``$REPRO_TUNER_CACHE`` or ``~/.cache/repro/tuning_cache.json``."""
+    """``$REPRO_TUNER_CACHE`` or ``~/.cache/repro/tuning_cache.json``.
+
+    Example::
+
+        cache = TuningCache(default_cache_path())
+    """
     env = os.environ.get("REPRO_TUNER_CACHE")
     if env:
         return env
@@ -55,7 +60,13 @@ def default_cache_path() -> str:
 
 @dataclasses.dataclass
 class CacheStats:
-    """Counters surfaced by ``TuningCache.stats`` (and tuner_bench)."""
+    """Counters surfaced by ``TuningCache.stats`` (and tuner_bench).
+
+    Example::
+
+        >>> CacheStats(hits=3, misses=1).hit_rate
+        0.75
+    """
 
     hits: int = 0
     misses: int = 0
@@ -66,10 +77,12 @@ class CacheStats:
 
     @property
     def hit_rate(self) -> float:
+        """hits / (hits + misses); 0.0 before any lookup."""
         n = self.hits + self.misses
         return self.hits / n if n else 0.0
 
     def as_dict(self) -> dict[str, Any]:
+        """Plain-dict form including the derived ``hit_rate``."""
         return dict(dataclasses.asdict(self), hit_rate=self.hit_rate)
 
 
@@ -102,6 +115,12 @@ class TuningCache:
     ``path=None`` keeps the cache memory-only (tests, throwaway runs).
     ``autosave`` persists after every ``put`` — refinement is orders of
     magnitude more expensive than a save, so the write is noise.
+
+    Example::
+
+        cache = TuningCache(path=None)          # memory-only (tests)
+        cache.put(hw_key, sig, {"block": 256}, probes=4)
+        entry = cache.get(hw_key, sig)          # {"plan": ..., ...}
     """
 
     def __init__(self, path: Optional[str] = None, *, capacity: int = 4096,
@@ -118,6 +137,7 @@ class TuningCache:
 
     @staticmethod
     def full_key(hw_key: str, sig: Union[WorkloadSignature, str]) -> str:
+        """The on-disk/in-memory key: ``<hardware_key>::<sig.key>``."""
         return f"{hw_key}::{_sig_key(sig)}"
 
     # -- core --------------------------------------------------------------
@@ -144,6 +164,8 @@ class TuningCache:
             seed_cost: Optional[float] = None, probes: int = 0,
             refine_time_s: float = 0.0,
             extra: Optional[dict] = None) -> dict:
+        """Memoize a refined plan (+ provenance riders via ``extra``);
+        evicts LRU past ``capacity`` and autosaves when configured."""
         k = self.full_key(hw_key, sig)
         entry = {
             "plan": dict(plan),
@@ -170,6 +192,7 @@ class TuningCache:
         return entry
 
     def clear(self) -> None:
+        """Drop every in-memory entry (the disk file is untouched)."""
         self._mem.clear()
 
     def __len__(self) -> int:

@@ -72,7 +72,12 @@ _default_cache: Optional[TuningCache] = None
 
 
 def get_default_cache() -> TuningCache:
-    """Process-wide cache, created lazily at the default path."""
+    """Process-wide cache, created lazily at the default path.
+
+    Example::
+
+        print(get_default_cache().stats.as_dict())
+    """
     global _default_cache
     if _default_cache is None:
         _default_cache = TuningCache(default_cache_path())
@@ -80,7 +85,12 @@ def get_default_cache() -> TuningCache:
 
 
 def set_default_cache(cache: Optional[TuningCache]) -> None:
-    """Swap the process-wide cache (None resets to lazy default)."""
+    """Swap the process-wide cache (None resets to lazy default).
+
+    Example::
+
+        set_default_cache(TuningCache(path=None))   # hermetic tests
+    """
     global _default_cache
     _default_cache = cache
 
@@ -103,6 +113,11 @@ class KernelSpec:
                         (None == clean fallback to the Eq. 1 seed)
     ``candidates``      (desc, hw, seed_value) -> values to probe
     ``run``             (plan, hw, interpret, *args, **kw) -> result
+
+    Example::
+
+        register_kernel(KernelSpec(name="mykernel", describe=...,
+                                   sig=..., seed_plan=..., ...))
     """
 
     name: str
@@ -120,6 +135,13 @@ KERNEL_REGISTRY: dict[str, KernelSpec] = {}
 
 
 def register_kernel(spec: KernelSpec) -> KernelSpec:
+    """Install a ``KernelSpec`` into the dispatch registry (returns it,
+    so modules can register at import time).
+
+    Example::
+
+        SPEC = register_kernel(KernelSpec(name="mykernel", ...))
+    """
     KERNEL_REGISTRY[spec.name] = spec
     return spec
 
@@ -131,7 +153,13 @@ def register_kernel(spec: KernelSpec) -> KernelSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ResolveInfo:
-    """Provenance of one resolved plan (tests + tuner_bench assert on it)."""
+    """Provenance of one resolved plan (tests + tuner_bench assert on it).
+
+    Example::
+
+        plan, info = resolve_plan("decode_attention", hw, "tuned", desc)
+        assert info.source in ("cache", "refined", "measured")
+    """
 
     source: str                 # planner | cache | refined | measured | fallback
     probes: int                 # refine probes spent THIS resolution
@@ -195,7 +223,14 @@ def resolve_plan(
     store: Optional[Any] = None,
     measure_opts: Optional[dict] = None,
 ) -> tuple[Any, ResolveInfo]:
-    """Resolve the mapping plan for one workload under one policy."""
+    """Resolve the mapping plan for one workload under one policy.
+
+    Example::
+
+        desc = {"s": 1024, "d": 64, "dtype": "float32", "dtype_bytes": 4}
+        block, info = resolve_plan("decode_attention", hw,
+                                   MappingPolicy.TUNED, desc)
+    """
     spec = KERNEL_REGISTRY[kernel]
     if measure not in MEASURE_MODES:
         raise ValueError(f"measure must be one of {MEASURE_MODES}, "
@@ -296,6 +331,10 @@ def tuned_call(
     **kwargs: Any,
 ) -> Any:
     """Run ``kernel`` with its mapping resolved through the tuner.
+
+    Example::
+
+        out = tuned_call("vecadd", x, y, hw=hw, policy="tuned")
 
     The single entry point the retrofitted call sites use: signature ->
     cache -> (refine) -> run.  ``hw`` defaults to runtime detection, the
@@ -814,7 +853,12 @@ def resolve_mesh_plan(
     policy: MappingPolicy | str = MappingPolicy.AUTO,
     cache: Optional[TuningCache] = None,
 ) -> MeshPlan:
-    """Mesh-tier entry used by ``launch.steps.resolve_microbatches``."""
+    """Mesh-tier entry used by ``launch.steps.resolve_microbatches``.
+
+    Example::
+
+        mesh_plan = resolve_mesh_plan(512, 8, act_bytes, hbm_budget)
+    """
     desc = dict(global_batch=global_batch, data_parallel=data_parallel,
                 activation_bytes_per_seq=activation_bytes_per_seq,
                 hbm_budget_bytes=hbm_budget_bytes)

@@ -71,7 +71,14 @@ def _canon_value(v: Any) -> str:
 
 @dataclasses.dataclass(frozen=True)
 class WorkloadSignature:
-    """Canonical identity of one kernel invocation's static parameters."""
+    """Canonical identity of one kernel invocation's static parameters.
+
+    Example::
+
+        >>> workload_signature("vecadd", shapes=[1024],
+        ...                    dtypes=["float32"], policy="tuned").key
+        'vecadd|1024|float32|tuned|'
+    """
 
     kernel: str
     shapes: tuple[tuple[int, ...], ...]
@@ -81,6 +88,7 @@ class WorkloadSignature:
 
     @property
     def key(self) -> str:
+        """The canonical string rendering (memoized; the cache key)."""
         cached = self.__dict__.get("_key")
         if cached is None:
             shp = ";".join("x".join(map(str, s)) for s in self.shapes)
@@ -106,6 +114,7 @@ class WorkloadSignature:
 
     @classmethod
     def from_dict(cls, d: dict) -> "WorkloadSignature":
+        """Inverse of ``as_dict`` (bit-exact round-trip)."""
         return cls(
             kernel=d["kernel"],
             shapes=tuple(tuple(int(x) for x in s) for s in d["shapes"]),
@@ -129,6 +138,12 @@ def workload_signature(
     entries may be dtypes, names, or arrays; ``policy`` may be a string or
     a ``MappingPolicy`` (its ``.value`` is used); ``extras`` are sorted by
     name so keyword order never matters.
+
+    Example::
+
+        sig = workload_signature("flash_attention",
+                                 shapes=[(256, 64), (256, 64)],
+                                 dtypes=["bfloat16"], causal=True)
     """
     pol = getattr(policy, "value", policy)
     return WorkloadSignature(
@@ -149,6 +164,10 @@ def hardware_key(hw: TpuParams) -> str:
     changed field must miss rather than replay a stale plan.  Memoized
     (``TpuParams`` is frozen/hashable) — this sits on the warm dispatch
     path that tuner_bench holds under 5% of a cold refine.
+
+    Example::
+
+        full_key = TuningCache.full_key(hardware_key(detect()), sig)
     """
     parts = [
         f"{f.name}={_canon_value(getattr(hw, f.name))}"

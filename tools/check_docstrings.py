@@ -1,0 +1,122 @@
+#!/usr/bin/env python
+"""Docstring drift check for the serve/ and tuner/ public APIs (CI-run).
+
+Two rules, enforced by AST inspection (no imports — pure source check,
+a pydocstyle-equivalent scoped to what this repo promises):
+
+  1. every PUBLIC module-level class / function / method in
+     ``src/repro/serve`` and ``src/repro/tuner`` has a docstring
+     (public = name without a leading underscore; ``__init__`` and
+     other dunders are exempt, as are ``@property`` one-liner getters
+     whose enclosing class documents them);
+  2. every class / function EXPORTED by the packages' ``__all__`` bears
+     an EXAMPLE in its docstring — an ``Example::`` block, a doctest
+     ``>>>``, or an indented shell line — so the reference surface
+     stays copy-paste runnable.
+
+    python tools/check_docstrings.py          # exit 1 on any violation
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PACKAGES = ("src/repro/serve", "src/repro/tuner")
+
+#: substrings whose presence marks a docstring as example-bearing
+EXAMPLE_MARKERS = (">>>", "Example::", "Example:", "PYTHONPATH=")
+
+
+def _has_example(doc: str | None) -> bool:
+    return bool(doc) and any(m in doc for m in EXAMPLE_MARKERS)
+
+
+def _public_defs(tree: ast.Module):
+    """Yield (node, qualname) for public module-level defs + methods."""
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            if node.name.startswith("_"):
+                continue
+            yield node, node.name
+            if isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)) \
+                            and not sub.name.startswith("_"):
+                        yield sub, f"{node.name}.{sub.name}"
+
+
+def _is_trivial_property(node: ast.AST) -> bool:
+    """A @property whose body is a single return — the enclosing class
+    docstring carries the semantics; skip the per-getter requirement."""
+    if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return False
+    decorated = any(isinstance(d, ast.Name) and d.id == "property"
+                    for d in node.decorator_list)
+    body = [n for n in node.body
+            if not isinstance(n, ast.Expr)]          # ignore docstring expr
+    return decorated and len(body) == 1 and isinstance(body[0], ast.Return)
+
+
+def _module_all(tree: ast.Module) -> list[str]:
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "__all__":
+                    return [ast.literal_eval(e) for e in node.value.elts]
+    return []
+
+
+def check_package(pkg: str) -> list[str]:
+    errors: list[str] = []
+    pkg_dir = os.path.join(ROOT, pkg)
+    exported: set[str] = set()
+    init = os.path.join(pkg_dir, "__init__.py")
+    with open(init) as f:
+        exported.update(_module_all(ast.parse(f.read())))
+
+    for fname in sorted(os.listdir(pkg_dir)):
+        if not fname.endswith(".py"):
+            continue
+        path = os.path.join(pkg_dir, fname)
+        rel = os.path.relpath(path, ROOT)
+        with open(path) as f:
+            tree = ast.parse(f.read())
+        if not ast.get_docstring(tree):
+            errors.append(f"{rel}: missing module docstring")
+        for node, qual in _public_defs(tree):
+            doc = ast.get_docstring(node)
+            if not doc and not _is_trivial_property(node):
+                errors.append(f"{rel}:{node.lineno}: {qual} has no "
+                              f"docstring")
+            top = qual.split(".")[0]
+            if top in exported and "." not in qual \
+                    and isinstance(node, (ast.FunctionDef, ast.ClassDef)) \
+                    and not _has_example(doc):
+                errors.append(f"{rel}:{node.lineno}: exported {qual} "
+                              f"lacks an example in its docstring "
+                              f"(need one of {EXAMPLE_MARKERS})")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for pkg in PACKAGES:
+        errors.extend(check_package(pkg))
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_pkgs = len(PACKAGES)
+    if errors:
+        print(f"\n{len(errors)} docstring violation(s) across {n_pkgs} "
+              f"packages", file=sys.stderr)
+        return 1
+    print(f"docstring check OK ({n_pkgs} packages)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
