@@ -151,6 +151,39 @@ def run(print_fn=print):
         rows.append((f"paged_gather[{label}]", us,
                      f"blocks={gb * (gt // gbs)};block={gbs};ok={ok}"))
         assert ok, ("paged_gather", label)
+
+    # fused paged decode: the table-consuming flash sweep (the serving
+    # default) — blocked reference and scalar-prefetch Pallas kernel
+    # (interpret here), numerics pinned against gather + dense decode,
+    # block_s resolved through the tuner like the serving router does
+    from repro.kernels.paged_decode_attention import (
+        paged_decode_attention_pallas, paged_decode_attention_ref)
+    from repro.models.attention import decode_attention_grouped
+
+    pdq = jax.random.normal(jax.random.key(8), (gb, 2, 1, 64), jnp.float32)
+    pdlen = jnp.asarray([500, 17, 512, 300], jnp.int32)
+    pd_desc = {"s": gt, "d": 64, "page_block": gbs,
+               "max_blocks_per_row": gt // gbs,
+               "dtype": "float32", "dtype_bytes": 4}
+    pd_block, pd_info = resolve_plan("paged_decode", HW, MappingPolicy.TUNED,
+                                     pd_desc, dcache)
+    logical = paged_gather_ref(gcache, gtables, gbs)
+    pd_expected = np.asarray(
+        decode_attention_grouped(pdq, logical, logical, pdlen))
+    for label, fn in (
+            ("ref", jax.jit(lambda q, c, t, n: paged_decode_attention_ref(
+                q, c, c, t, n, page_block=gbs, block_s=int(pd_block)))),
+            ("pallas", jax.jit(lambda q, c, t, n:
+                               paged_decode_attention_pallas(
+                q, c, c, t, n, page_block=gbs, block_s=int(pd_block),
+                interpret=True)))):
+        got = np.asarray(fn(pdq, gcache, gtables, pdlen))
+        ok = np.allclose(got, pd_expected, rtol=1e-5, atol=1e-5)
+        us = _time(fn, pdq, gcache, gtables, pdlen)
+        rows.append((f"paged_decode[{label}]", us,
+                     f"block_s={int(pd_block)};page_block={gbs};"
+                     f"probes={pd_info.probes};ok={ok}"))
+        assert ok, ("paged_decode", label)
     ops.set_force_mode("auto")
 
     # mapper decisions for the record

@@ -35,6 +35,10 @@ Acceptance (asserted):
     recycling produce IDENTICAL tokens on identical traffic — the
     gather is a pure copy (``serve_recycle[...]`` rows report both
     sides' tok/s);
+  * the FUSED table-consuming decode read (the default) produces
+    IDENTICAL tokens to the gather-then-sweep ablation and sustains at
+    least its steady-state tokens/s — the extra HBM round-trip the
+    fusion deletes (``serve_decode_read[...]`` rows);
   * tuned and default (GSPMD) executed prefill both drain the full mix;
     the ``serve_prefill[...]`` rows report the TTFT gap (logits parity
     is tolerance-pinned in tests, not bit-asserted here: the sweeps
@@ -147,6 +151,40 @@ def _paged_vs_copying(cfg, params, print_fn) -> dict:
     return out
 
 
+def _gather_vs_fused(cfg, params, print_fn) -> dict:
+    """The paged decode read, both ways, on identical recycle-heavy
+    traffic: the fused table-consuming sweep (the default — tables ride
+    into ``kernels.paged_decode_attention`` as data operands) vs the
+    gather-then-sweep ablation (``fused_decode=False`` — one extra HBM
+    round-trip to materialize the logical view).  Tokens must match
+    exactly, and the fusion must not lose steady-state throughput."""
+    out, tokens = {}, {}
+    for name, fused in (("gather", False), ("fused", True)):
+        eng = ServeEngine(cfg, slots=2, max_len=MAX_LEN, params=params,
+                          fused_decode=fused,
+                          tuning_cache=TuningCache(path=None))
+        drive(eng, RECYCLE_WARMUP)
+        eng.reset()
+        report = drive(eng, RECYCLE_MEASURED)
+        s = report.summary
+        assert s.n_completed == RECYCLE_MEASURED.n_requests, \
+            f"decode_read[{name}]: requests starved"
+        print_fn(
+            f"serve_decode_read[{name}],"
+            f"{s.decode_s * 1e6 / max(s.decode_steps, 1):.0f},"
+            f"tok_s={s.tokens_per_s:.1f};"
+            f"ttft_p50_ms={s.ttft_p50_s * 1e3:.0f};"
+            f"util={s.utilization:.2f}")
+        out[name] = s.tokens_per_s
+        tokens[name] = sorted(report.outputs.values())
+    assert tokens["fused"] == tokens["gather"], \
+        "fused paged decode changed tokens"
+    assert out["fused"] >= out["gather"], \
+        (f"fused decode read ({out['fused']:.1f} tok/s) must sustain at "
+         f"least the gather path ({out['gather']:.1f} tok/s)")
+    return out
+
+
 def _prefill_tile_ttft(cfg, params, print_fn) -> dict:
     """Executed bucket-tuned prefill tiles vs the GSPMD default path on
     identical traffic: the TTFT side of the tuned-plan -> executed-kernel
@@ -177,8 +215,11 @@ def _prefill_tile_ttft(cfg, params, print_fn) -> dict:
 
 
 def _steady_state(name, cfg, params, spec, admission, print_fn):
+    # paged=False: the bucketing ablation isolates the LATTICE variable
+    # (naive's mode="exact" has no finite lattice and cannot page at
+    # all); the paged/fused layouts get their own dedicated rows
     eng = ServeEngine(cfg, slots=SLOTS, max_len=MAX_LEN, params=params,
-                      spec=spec, admission=admission,
+                      spec=spec, admission=admission, paged=False,
                       tuning_cache=TuningCache(path=None))
     drive(eng, WARMUP)                       # cold pass: compiles + refines
     eng.reset()
@@ -235,6 +276,7 @@ def run(print_fn=print) -> dict:
         "bucketing must keep the compile set smaller than per-shape dispatch"
 
     recycle = _paged_vs_copying(cfg, params, print_fn)
+    decode_read = _gather_vs_fused(cfg, params, print_fn)
     prefill = _prefill_tile_ttft(cfg, params, print_fn)
 
     families = _family_matrix(print_fn)
@@ -248,6 +290,7 @@ def run(print_fn=print) -> dict:
         "bucketed_decode_shapes": bucketed.compiled_decode_shapes,
         "naive_decode_shapes": naive.compiled_decode_shapes,
         "recycle_tok_s": recycle,
+        "decode_read_tok_s": decode_read,
         "prefill_ttft_p50_s": prefill,
         "family_tok_s": families,
     }

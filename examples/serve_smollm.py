@@ -7,9 +7,11 @@ slots as requests finish, and resolves each shape bucket's kernel plans
 through the runtime tuner (zero-probe once the bucket is warm).  The
 resolved plans are EXECUTED end to end, not just recorded: the prompt
 bucket's flash tiles parameterize the prefill that runs, the pool
-bucket's cache block parameterizes the decode sweep, and with
-``paged=True`` (below) the KV pool is physically paged — slot recycling
-re-points block tables instead of copying cache rows.
+bucket's cache block parameterizes the decode sweep, and — since the KV
+pool is physically paged by default — the decode sweep consumes each
+row's block table directly (the fused ``paged_decode_attention`` read at
+the router's tuned ``block_s``), so slot recycling re-points block
+tables instead of copying cache rows.
 
     PYTHONPATH=src python examples/serve_smollm.py
 """
@@ -19,8 +21,7 @@ import numpy as np
 from repro.serve import ServeEngine
 
 rng = np.random.default_rng(0)
-engine = ServeEngine("smollm-135m", slots=2, max_len=128, reduced=True,
-                     paged=True)
+engine = ServeEngine("smollm-135m", slots=2, max_len=128, reduced=True)
 
 reqs = []
 for i, (plen, out_len) in enumerate([(5, 12), (12, 6), (3, 10), (20, 4),

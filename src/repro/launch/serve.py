@@ -59,6 +59,8 @@ def serve_batch(arch: str, prompts: list[list[int]], *,
     if reduced:
         cfg = cfg.reduced()
     max_len = max(len(p) for p in prompts) + max_new_tokens + 1
+    # the engine's paged-KV pool (on by default) needs whole-block rows
+    max_len = -(-max_len // 16) * 16
     engine = ServeEngine(cfg, slots=len(prompts), max_len=max_len,
                          mesh=mesh, params=params, policy=policy,
                          measure=measure, verbose=False)
@@ -91,6 +93,10 @@ def main():
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--mode", choices=("open", "closed"), default="open")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="disable physical KV paging (fused table-consuming "
+                         "decode) and serve from contiguous cache rows; "
+                         "required for --bucket-mode exact")
     ap.add_argument("--bucket-mode",
                     choices=("pow2", "linear", "exact", "fixed"),
                     default="pow2")
@@ -106,6 +112,10 @@ def main():
 
     cfg = get_config(args.arch)
     vocab = (cfg if args.full else cfg.reduced()).vocab_size
+    paged = not args.no_paged
+    if paged:
+        # paged pools need whole-block lattice lengths (block_size=16)
+        args.max_len = -(-args.max_len // 16) * 16
     rng = np.random.default_rng(args.seed)
     lo, hi = 4, max(8, args.max_len - args.max_new - 1)
     traffic = TrafficConfig(
@@ -116,7 +126,7 @@ def main():
         seed=int(rng.integers(1 << 30)))
     engine = ServeEngine(
         args.arch, slots=args.slots, max_len=args.max_len,
-        reduced=not args.full,
+        reduced=not args.full, paged=paged,
         spec=BucketSpec(max_len=args.max_len, mode=args.bucket_mode),
         policy=args.policy, measure=args.measure, verbose=True)
     report = drive(engine, traffic)

@@ -225,15 +225,19 @@ def make_decode_step(model: Model, plan: Plan,
     changes are the compile events the lattice bounds).  ``None`` keeps
     the plain einsum decode path.  ``page_tables`` (a traced (B, nb)
     array — live tables change every admission) + ``page_block`` (static)
-    switch the KV caches to the physical block-table layout."""
+    switch the KV caches to the physical block-table layout;
+    ``paged_decode_block`` (static, router-tuned) fuses the table read
+    into the attention sweep itself."""
     ctx = make_ctx(plan)
     ctx.flags.update(flags or {})
 
     def decode_step(params, cache, tokens, decode_block=None,
-                    page_tables=None, page_block=None):
+                    page_tables=None, page_block=None,
+                    paged_decode_block=None):
         return model.decode_step(params, cache, tokens, ctx=ctx,
                                  decode_block=decode_block,
                                  page_tables=page_tables,
-                                 page_block=page_block)
+                                 page_block=page_block,
+                                 paged_decode_block=paged_decode_block)
 
     return decode_step

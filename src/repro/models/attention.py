@@ -703,6 +703,7 @@ def attention_decode(
     decode_block: Optional[int] = None,
     page_tables=None,             # (B, nb) int32 | None — physical paging
     page_block: Optional[int] = None,
+    paged_decode_block: Optional[int] = None,
     ctx: ShardCtx,
 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
     """One-token decode; returns (out (B,1,D), updated caches).
@@ -719,10 +720,14 @@ def attention_decode(
     (GSPMD-distributable; the non-serving callers).
 
     ``page_tables`` switches the cache to PHYSICAL paging: the (B, T)
-    arrays become a block grid, writes scatter through each row's block
-    table, and the sweep reads a gather-by-block-table logical view
-    (Pallas gather kernel on TPU, ``jnp.take`` reference elsewhere), so
-    slot recycling re-points blocks instead of copying cache rows."""
+    arrays become a block grid and writes scatter through each row's
+    block table.  With ``paged_decode_block`` (the router's tuned fused
+    ``block_s``) the sweep CONSUMES the tables directly — the fused
+    ``kernels.paged_decode_attention`` streams physical pages with no
+    materialized logical view.  Without it the read falls back to
+    gather-then-sweep (Pallas gather kernel on TPU, ``jnp.take``
+    reference elsewhere); either way slot recycling re-points blocks
+    instead of copying cache rows."""
     b = x.shape[0]
     q, k, v = _project_qkv(params, x, cfg, cos, sin, ctx)
     # write the new kv at position `pos` (quantizing if the cache is int8)
@@ -732,6 +737,22 @@ def attention_decode(
                            page_block=page_block)
     kr = _cache_read(k_cache, x.dtype)
     vr = _cache_read(v_cache, x.dtype)
+    if page_tables is not None and paged_decode_block is not None:
+        # fused path: the block table rides into the kernel as a data
+        # operand (scalar-prefetched on the Pallas path), so the paged
+        # cache is read exactly once — no logical-view round-trip
+        from repro.kernels.paged_decode_attention import \
+            paged_decode_attention
+
+        use_pallas, interpret = _pallas_mode()
+        clen = jnp.broadcast_to(jnp.asarray(pos + 1, jnp.int32), (b,))
+        o = paged_decode_attention(
+            q[:, 0], kr, vr, page_tables, clen,
+            page_block=int(page_block), block_s=int(paged_decode_block),
+            window=window, use_pallas=use_pallas, interpret=interpret)
+        out = jnp.einsum("bhk,hkd->bd", o.reshape(b, -1, cfg.head_dim),
+                         params["wo"])
+        return out[:, None, :], (k_cache, v_cache)
     if page_tables is not None:
         from repro.kernels.paged_gather import paged_gather
 

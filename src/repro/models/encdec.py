@@ -156,13 +156,15 @@ def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
 
 def encdec_decode(params: dict, cache: dict, tokens: jax.Array,
                   cfg: ModelConfig, *, ctx: ShardCtx,
-                  decode_block=None, page_tables=None, page_block=None):
+                  decode_block=None, page_tables=None, page_block=None,
+                  paged_decode_block=None):
     """One decoder step.  ``cache["pos"]`` may be a scalar (fixed batch)
     or a (B,) vector (the serving pool's ragged rows); ``decode_block``
     is the bucket-tuned attention sweep mapping (see
     ``attention.attention_decode``).  Cross-attention KV is static per
     request, so only self-attention consumes the tuned block — and only
-    the self-attention caches page under ``page_tables``."""
+    the self-attention caches page under ``page_tables`` (and fuse the
+    table read under ``paged_decode_block``)."""
     x = embed(params["embed"], tokens)
     pos = cache["pos"]
     rope_pos = pos[:, None] if pos.ndim else pos[None]
@@ -175,7 +177,9 @@ def encdec_decode(params: dict, cache: dict, tokens: jax.Array,
                                        cos=cos, sin=sin,
                                        decode_block=decode_block,
                                        page_tables=page_tables,
-                                       page_block=page_block, ctx=ctx)
+                                       page_block=page_block,
+                                       paged_decode_block=paged_decode_block,
+                                       ctx=ctx)
         x = x + a
         h = rmsnorm(x, lp["ln_x"], cfg.norm_eps)
         x = x + _cross_attn(lp["cross"], h, ck, cv, cfg, ctx)

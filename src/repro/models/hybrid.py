@@ -132,12 +132,14 @@ def hybrid_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
 
 def hybrid_decode(params: dict, cache: dict, tokens: jax.Array,
                   cfg: ModelConfig, *, ctx: ShardCtx,
-                  decode_block=None, page_tables=None, page_block=None):
+                  decode_block=None, page_tables=None, page_block=None,
+                  paged_decode_block=None):
     """One decode step.  ``cache["pos"]`` may be a scalar (fixed batch)
     or a (B,) vector (the serving pool's ragged rows); ``decode_block``
     is the bucket-tuned attention sweep mapping and ``page_tables``/
     ``page_block`` the physical block-table layout for the shared
-    attention caches (see ``attention.attention_decode``); the ssm
+    attention caches — with ``paged_decode_block`` the sweep consumes
+    the tables directly (see ``attention.attention_decode``); the ssm
     states are position-free and never page."""
     ng, k = n_groups(cfg), cfg.hybrid_attn_every
     x = embed(params["embed"], tokens)
@@ -156,7 +158,9 @@ def hybrid_decode(params: dict, cache: dict, tokens: jax.Array,
                                        kc, vc, pos, cos=cos, sin=sin,
                                        decode_block=decode_block,
                                        page_tables=page_tables,
-                                       page_block=page_block, ctx=ctx)
+                                       page_block=page_block,
+                                       paged_decode_block=paged_decode_block,
+                                       ctx=ctx)
         x = x + a
         h = rmsnorm(x, params["shared"]["ln2"], cfg.norm_eps)
         x = x + mlp(params["shared"]["mlp"], h, cfg.mlp_act, ctx)

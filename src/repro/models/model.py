@@ -215,17 +215,22 @@ class Model:
 
     def decode_step(self, params, cache, tokens, *, ctx: ShardCtx = NO_SHARD,
                     decode_block: Optional[int] = None,
-                    page_tables=None, page_block: Optional[int] = None):
+                    page_tables=None, page_block: Optional[int] = None,
+                    paged_decode_block: Optional[int] = None):
         """One decode step.  ``decode_block`` is the bucket-tuned
         decode-attention cache block resolved by the serving router; it
         selects the *executed* attention sweep (Pallas kernel or blocked
         reference — see ``attention.attention_decode``).  ``None`` keeps
         the plain einsum path; attention-free families ignore it.
         ``page_tables`` (B, nb) + ``page_block`` switch the KV caches to
-        the physical block-table layout (serving's paged pool)."""
+        the physical block-table layout (serving's paged pool);
+        ``paged_decode_block`` (the router's tuned fused ``block_s``)
+        makes the sweep consume the tables directly instead of gathering
+        a logical view first."""
         cfg, f = self.cfg, self.cfg.family
         kw = dict(ctx=ctx, decode_block=decode_block,
-                  page_tables=page_tables, page_block=page_block)
+                  page_tables=page_tables, page_block=page_block,
+                  paged_decode_block=paged_decode_block)
         if f in ("dense", "moe", "vlm"):
             return tf_mod.decode_step(params, cache, tokens, cfg, **kw)
         if f == "ssm":

@@ -231,15 +231,16 @@ def ssm_init_cache(cfg: ModelConfig, batch: int, dtype, abstract=False):
 
 def ssm_decode(params: dict, cache: dict, tokens: jax.Array,
                cfg: ModelConfig, *, ctx: ShardCtx,
-               decode_block=None, page_tables=None, page_block=None):
+               decode_block=None, page_tables=None, page_block=None,
+               paged_decode_block=None):
     """One recurrent decode step.  The state update is position-free, so
     a vector ``cache["pos"]`` (the serving pool's ragged rows) needs no
     special handling — it only advances per row.  ``decode_block`` and
-    ``page_tables``/``page_block`` are accepted for decode-step API
+    the ``page_*`` arguments are accepted for decode-step API
     uniformity and ignored: there is no attention sweep to map and no
     time axis to page (the family is attention-free; under physical
     paging its pool participates in block *accounting* only)."""
-    del decode_block, page_tables, page_block
+    del decode_block, page_tables, page_block, paged_decode_block
     x = embed(params["embed"], tokens)
 
     def body(x, xs):

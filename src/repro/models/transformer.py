@@ -283,6 +283,7 @@ def decode_step(
     decode_block: Optional[int] = None,
     page_tables=None,
     page_block: Optional[int] = None,
+    paged_decode_block: Optional[int] = None,
 ):
     """One greedy decode step: (logits (B,1,V), updated cache).
 
@@ -294,7 +295,9 @@ def decode_step(
     router — selects the executed attention sweep (see
     ``attention.attention_decode``); ``None`` keeps the einsum path.
     ``page_tables``/``page_block`` switch the KV arrays to the physical
-    block-table layout (scatter writes, gather-by-table reads)."""
+    block-table layout (scatter writes, gather-by-table reads);
+    ``paged_decode_block`` additionally fuses the read — the sweep
+    consumes the tables directly instead of gathering first."""
     x = embed(params["embed"], tokens)
     x = ctx.p(x, "batch", None, "embed")
     pos = cache["pos"]
@@ -312,7 +315,8 @@ def decode_step(
         a, (k_c, v_c) = attention_decode(
             layer_params["attn"], h, cfg, k_c, v_c, pos,
             cos=cos, sin=sin, window=win, decode_block=decode_block,
-            page_tables=page_tables, page_block=page_block, ctx=ctx)
+            page_tables=page_tables, page_block=page_block,
+            paged_decode_block=paged_decode_block, ctx=ctx)
         x = x + a
         h = rmsnorm(x, layer_params["ln2"], cfg.norm_eps)
         m, _ = _mlp_or_moe(layer_params, cfg, h, ctx)

@@ -156,10 +156,16 @@ class BucketPlan:
     #: the prompt bucket via ``BucketRouter.prefill_tiles``
     prefill_blocks: Optional[tuple]
     prefill_info: Optional[ResolveInfo]
+    #: fused paged-decode ``block_s`` (a whole number of physical pages
+    #: at the router's page geometry) — ``None`` when the router has no
+    #: page geometry (non-paged engines) or the family is attention-free
+    paged_decode_block: Optional[int] = None
+    paged_decode_info: Optional[ResolveInfo] = None
 
     @property
     def probes(self) -> int:
-        return sum(i.probes for i in (self.decode_info, self.prefill_info)
+        return sum(i.probes for i in (self.decode_info, self.prefill_info,
+                                      self.paged_decode_info)
                    if i is not None)
 
 
@@ -170,18 +176,23 @@ class KernelRow:
     built from the bucket geometry, and which decision variables the
     plan contributes to ``BucketPlan``.
 
+    ``desc`` receives the router's page geometry as its fourth argument
+    (``None`` for non-paged routers); rows with ``needs_geometry=True``
+    are skipped — resolved to ``None`` — when there is none.
+
     Example::
 
         KernelRow(kernel="decode_attention",
                   applies=lambda cfg: not cfg.is_attention_free,
-                  desc=lambda cfg, b, db: {"s": b.kv_len, ...},
+                  desc=lambda cfg, b, db, geo: {"s": b.kv_len, ...},
                   extract=lambda plan: int(plan))
     """
 
     kernel: str                                        # KERNEL_REGISTRY name
     applies: Any                                       # (cfg) -> bool
-    desc: Any                                          # (cfg, bucket, db) -> dict
+    desc: Any                                          # (cfg, bucket, db, geo) -> dict
     extract: Any                                       # plan -> plan value
+    needs_geometry: bool = False                       # requires page geometry
 
 
 #: the per-bucket kernel set, declaratively.  Adding a bucket-tuned
@@ -191,18 +202,28 @@ KERNEL_TABLE: tuple[KernelRow, ...] = (
     KernelRow(
         kernel="decode_attention",
         applies=lambda cfg: not cfg.is_attention_free,
-        desc=lambda cfg, b, db: {
+        desc=lambda cfg, b, db, geo: {
             "s": b.kv_len, "d": cfg.head_dim,
             "dtype": cfg.dtype, "dtype_bytes": db},
         extract=lambda plan: int(plan)),
     KernelRow(
         kernel="flash_attention",
         applies=lambda cfg: not cfg.is_attention_free,
-        desc=lambda cfg, b, db: {
+        desc=lambda cfg, b, db, geo: {
             "seq_q": b.kv_len, "seq_kv": b.kv_len,
             "head_dim": cfg.head_dim, "dtype": cfg.dtype,
             "dtype_bytes": db, "causal": True},
         extract=lambda plan: (int(plan.block_q), int(plan.block_k))),
+    KernelRow(
+        kernel="paged_decode",
+        applies=lambda cfg: not cfg.is_attention_free,
+        desc=lambda cfg, b, db, geo: {
+            "s": b.kv_len, "d": cfg.head_dim,
+            "page_block": geo["page_block"],
+            "max_blocks_per_row": geo["max_blocks_per_row"],
+            "dtype": cfg.dtype, "dtype_bytes": db},
+        extract=lambda plan: int(plan),
+        needs_geometry=True),
 )
 
 
@@ -242,7 +263,8 @@ class BucketRouter:
                  slots: int, hw: Optional[TpuParams] = None,
                  policy: MappingPolicy | str = MappingPolicy.TUNED,
                  cache: Optional[TuningCache] = None,
-                 measure: str = "off", store: Optional[Any] = None):
+                 measure: str = "off", store: Optional[Any] = None,
+                 page_block: Optional[int] = None):
         self.cfg = cfg
         self.spec = spec
         self.slots = slots
@@ -251,9 +273,24 @@ class BucketRouter:
         self.cache = cache
         self.measure = measure
         self.store = store
+        #: physical page size of the engine's paged KV pool; ``None`` for
+        #: non-paged engines, in which case geometry-keyed rows
+        #: (``paged_decode``) resolve to ``None`` in every plan
+        self.page_block = page_block
         self.stats = RouterStats()
         self._plans: dict[str, BucketPlan] = {}
         self._prefill_tiles: dict[int, tuple[int, int]] = {}
+
+    def _geometry(self) -> Optional[dict]:
+        """Table geometry the fused paged-decode plan is keyed on: the
+        page size plus the widest block table any bucket can need (the
+        lattice cap's page count) — so one tuned ``block_s`` remains
+        legal across pool growth."""
+        if self.page_block is None:
+            return None
+        pb = int(self.page_block)
+        return {"page_block": pb,
+                "max_blocks_per_row": -(-self.spec.max_len // pb)}
 
     # -- lattice ----------------------------------------------------------
 
@@ -304,21 +341,25 @@ class BucketRouter:
             return hit
         self.stats.cold += 1
         db = self._dtype_bytes()
+        geo = self._geometry()
         values: dict[str, Any] = {}
         infos: dict[str, Optional[ResolveInfo]] = {}
         for row in KERNEL_TABLE:
-            if not row.applies(self.cfg):
+            if not row.applies(self.cfg) or (row.needs_geometry
+                                             and geo is None):
                 values[row.kernel], infos[row.kernel] = None, None
                 continue
             kplan, info = self._resolve_kernel(
-                row.kernel, row.desc(self.cfg, bucket, db))
+                row.kernel, row.desc(self.cfg, bucket, db, geo))
             values[row.kernel] = row.extract(kplan)
             infos[row.kernel] = info
         plan = BucketPlan(bucket=bucket, sig=sig,
                           decode_block=values["decode_attention"],
                           decode_info=infos["decode_attention"],
                           prefill_blocks=values["flash_attention"],
-                          prefill_info=infos["flash_attention"])
+                          prefill_info=infos["flash_attention"],
+                          paged_decode_block=values["paged_decode"],
+                          paged_decode_info=infos["paged_decode"])
         self._plans[sig.key] = plan
         return plan
 
@@ -349,7 +390,7 @@ class BucketRouter:
         plan, _ = self._resolve_kernel(
             row.kernel,
             row.desc(self.cfg, Bucket(self.slots, prompt_bucket),
-                     self._dtype_bytes()))
+                     self._dtype_bytes(), None))
         tiles = row.extract(plan)
         self._prefill_tiles[prompt_bucket] = tiles
         return tiles

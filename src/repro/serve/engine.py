@@ -90,17 +90,24 @@ class ServeEngine:
     exactly as given (callers shrinking a config do it explicitly, e.g.
     ``get_config(n).reduced()``).
 
-    ``paged=True`` makes KV paging PHYSICAL: each lease's block ids
-    become an indirection table threaded into the decode step, writes
-    scatter into leased blocks, reads gather by table, and admission
-    after recycling re-points blocks instead of copying cache rows.
+    ``paged=True`` (the default) makes KV paging PHYSICAL: each lease's
+    block ids become an indirection table threaded into the decode step,
+    writes scatter into leased blocks, and admission after recycling
+    re-points blocks instead of copying cache rows.  The decode read is
+    FUSED by default — the tables ride into
+    ``kernels.paged_decode_attention`` as data operands at the router's
+    tuned ``block_s`` — and ``fused_decode=False`` falls back to
+    gather-then-sweep (the fused-vs-gather ablation
+    ``benchmarks/serve_bench.py`` measures).  ``paged=False`` keeps the
+    contiguous row layout; note paged mode requires ``max_len`` (and
+    every lattice length) to be a multiple of ``block_size``.
     ``use_prefill_tiles=False`` drops the bucket-tuned prefill flash
     tiles back to the GSPMD path (the tuned-vs-default ablation
     ``benchmarks/serve_bench.py`` measures).
 
     Example::
 
-        eng = ServeEngine("smollm-135m", slots=4, max_len=256, paged=True)
+        eng = ServeEngine("smollm-135m", slots=4, max_len=256)
         eng.submit([1, 2, 3], max_new_tokens=8)
         report = eng.run()
     """
@@ -120,7 +127,8 @@ class ServeEngine:
                  params=None,
                  block_size: int = 16,
                  total_blocks: Optional[int] = None,
-                 paged: bool = False,
+                 paged: bool = True,
+                 fused_decode: bool = True,
                  use_prefill_tiles: bool = True,
                  eos_id: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic,
@@ -154,11 +162,13 @@ class ServeEngine:
 
         self.router = BucketRouter(cfg, self.spec, slots=slots, hw=hw,
                                    policy=policy, cache=tuning_cache,
-                                   measure=measure, store=store)
+                                   measure=measure, store=store,
+                                   page_block=block_size if paged else None)
         self._block_size = block_size
         self._total_blocks = total_blocks
         self._admission = admission
         self.paged = paged
+        self.fused_decode = fused_decode
         self.use_prefill_tiles = use_prefill_tiles
         kv0 = self.spec.quantize(1)
         if paged:
@@ -196,7 +206,8 @@ class ServeEngine:
                                 static_argnames=("prefill_tiles",))
         self._decode = jax.jit(make_decode_step(self.model, self.plan),
                                static_argnames=("decode_block",
-                                                "page_block"))
+                                                "page_block",
+                                                "paged_decode_block"))
         self._cache = self.adapter.init_pool(self.model, slots, kv0,
                                              expand_kv=self.plan.expand_kv)
         self._tables = np.full((slots, self.pool.max_blocks_per_row), -1,
@@ -359,7 +370,11 @@ class ServeEngine:
             if self._tables_dev is None:
                 self._tables_dev = jnp.asarray(self._tables)
             kw = dict(page_tables=self._tables_dev,
-                      page_block=self._block_size)
+                      page_block=self._block_size,
+                      # the router's tuned fused block_s — None drops the
+                      # read back to gather-then-sweep (the ablation)
+                      paged_decode_block=(plan.paged_decode_block
+                                          if self.fused_decode else None))
         t0 = time.perf_counter()
         logits, self._cache = self._decode(self.params, dict(self._cache),
                                            jnp.asarray(self._tokens),

@@ -723,6 +723,80 @@ def _register_decode_attention():
         cap=lambda d: 8192)
 
 
+def _register_paged_decode():
+    """The fused table-consuming paged decode sweep.  Not routable
+    through ``_register_int_block``: its legality quantum is the TABLE
+    geometry (``block_s`` must be whole physical pages), so the desc's
+    ``page_block`` — not a registration constant — legalizes the value,
+    and the geometry keys the signature (a different page size or table
+    width is a different workload)."""
+    from repro.kernels.paged_decode_attention import (paged_decode_attention,
+                                                      plan_paged_block)
+
+    def describe(q, k_cache, v_cache, tables, cache_len=None, *,
+                 page_block, **kwargs):
+        return {"s": int(k_cache.shape[1]), "d": int(k_cache.shape[-1]),
+                "page_block": int(page_block),
+                "max_blocks_per_row": int(tables.shape[-1]),
+                "dtype": _dt(k_cache), "dtype_bytes": k_cache.dtype.itemsize}
+
+    def sig(desc, policy):
+        return workload_signature(
+            "paged_decode", shapes=[(desc["s"], desc["d"])],
+            dtypes=[desc["dtype"]], policy=policy,
+            page_block=desc["page_block"],
+            max_blocks_per_row=desc["max_blocks_per_row"])
+
+    def _cap(desc):
+        pb = desc["page_block"]
+        return max(pb, min(8192 // pb * pb,
+                           ceil_div(desc["s"], pb) * pb))
+
+    def plan_from_value(desc, hw, value):
+        pb = desc["page_block"]
+        return _legal_int(int(value), pb, pb, _cap(desc))
+
+    def seed_plan(desc, hw, policy):
+        return plan_from_value(desc, hw, plan_paged_block(
+            desc["s"], desc["d"], desc["page_block"], hw, policy,
+            desc["dtype_bytes"]))
+
+    def cost_model(desc, hw):
+        s, pb, db = desc["s"], desc["page_block"], desc["dtype_bytes"]
+        d, dpad = desc["d"], max(desc["d"], 128)
+
+        def cost(block):
+            block = plan_from_value(desc, hw, block)
+            if 4 * block * dpad * db > hw.vmem_budget_bytes:
+                return _INF
+            g = ceil_div(s, block)
+            padded = g * block
+            # k/v streamed once through the table — same bytes as the
+            # gather-free dense sweep; the indirection costs one program
+            # per PAGE (not per block_s chunk), which is what makes tiny
+            # blocks lose here
+            return (_roofline_s(padded * 4.0 * d, padded * 2.0 * d * db, hw)
+                    + _launch_s(g * (block // pb), hw))
+
+        return cost
+
+    def candidates(desc, hw, seed_value):
+        pb = desc["page_block"]
+        return _scaled_candidates(int(seed_value), pb, pb, _cap(desc))
+
+    def run(plan, hw, interpret, q, k_cache, v_cache, tables,
+            cache_len=None, **kwargs):
+        return paged_decode_attention(q, k_cache, v_cache, tables, cache_len,
+                                      block_s=int(plan), interpret=interpret,
+                                      **kwargs)
+
+    return register_kernel(KernelSpec(
+        name="paged_decode", describe=describe, sig=sig,
+        seed_plan=seed_plan, plan_value=int,
+        plan_from_value=plan_from_value, cost_model=cost_model,
+        candidates=candidates, run=run))
+
+
 def _register_stencil():
     from repro.kernels.stencil import gaussian_blur_pallas, plan_stencil_rows
 
@@ -882,6 +956,7 @@ def _populate() -> None:
     _register_flash_attention()
     _register_rmsnorm()
     _register_decode_attention()
+    _register_paged_decode()
     _register_stencil()
     _register_gcn()
     _register_nn_search()

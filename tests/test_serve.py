@@ -386,8 +386,11 @@ def test_tuned_decode_block_parameterizes_executed_step(f32_cfg, monkeypatch):
 
     monkeypatch.setattr(attn_mod, "blocked_decode_attention", spy)
     params = build_model(f32_cfg).init(jax.random.key(0))
+    # paged=False: the paged default reads through the FUSED kernel and
+    # never reaches blocked_decode_attention — its executed-plan pin
+    # lives in tests/test_paged_decode.py
     eng = ServeEngine(f32_cfg, slots=2, max_len=64, params=params,
-                      tuning_cache=TuningCache(path=None))
+                      paged=False, tuning_cache=TuningCache(path=None))
     eng.submit([1, 2, 3], max_new_tokens=2)
     report = eng.run()
     assert report.summary.n_completed == 1

@@ -16,9 +16,11 @@ see docs/TUNING.md for the workflow.
 
 Where the tuned values land: every resolved plan is EXECUTED, not just
 recorded — kernel calls through ``kernels.ops``, the serving decode
-sweep (per-bucket ``decode_block``), and the serving prefill (per
-prompt-bucket flash tiles) all run at the mapping the tuner picked; see
-docs/KERNELS.md for the full plan -> executed-kernel walkthrough.
+sweep (per-bucket ``decode_block``, plus the fused paged-decode
+``block_s`` now that the engine pages its KV pool by default), and the
+serving prefill (per prompt-bucket flash tiles) all run at the mapping
+the tuner picked; see docs/KERNELS.md for the full plan ->
+executed-kernel walkthrough.
 
 On non-TPU platforms kernels run in Pallas interpret mode, so recorded
 times characterize the interpreter — which is precisely what makes the
