@@ -13,15 +13,23 @@ row's block table directly (the fused ``paged_decode_attention`` read at
 the router's tuned ``block_s``), so slot recycling re-points block
 tables instead of copying cache rows.
 
+The run is traced end to end through ``repro.obs``: every prefill admit
+and decode tick lands as a span carrying its bucket key and executed
+plan, and the trace is written as a Perfetto/Chrome JSON you can open
+at https://ui.perfetto.dev (see docs/OBSERVABILITY.md).
+
     PYTHONPATH=src python examples/serve_smollm.py
 """
 
 import numpy as np
 
+from repro.obs import Tracer, write_trace
 from repro.serve import ServeEngine
 
 rng = np.random.default_rng(0)
-engine = ServeEngine("smollm-135m", slots=2, max_len=128, reduced=True)
+tracer = Tracer()
+engine = ServeEngine("smollm-135m", slots=2, max_len=128, reduced=True,
+                     tracer=tracer)
 
 reqs = []
 for i, (plen, out_len) in enumerate([(5, 12), (12, 6), (3, 10), (20, 4),
@@ -49,3 +57,8 @@ print(f"\n{s.n_completed}/{s.n_requests} requests, "
 print(f"compiled decode shapes: {report.compiled_decode_shapes}, "
       f"prefill shapes: {report.compiled_prefill_shapes}, "
       f"router: {report.router_stats}")
+
+trace_path = write_trace(tracer, "serve-smollm-trace.json")
+print(f"trace: {len(tracer.spans())} spans -> {trace_path} "
+      f"(open at ui.perfetto.dev, or run "
+      f"`PYTHONPATH=src python tools/trace_view.py {trace_path}`)")

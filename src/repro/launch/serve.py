@@ -17,13 +17,15 @@ points:
     device work on a cache miss, clean fallback on an empty store).
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \\
-      --requests 16 --rate 8 --measure cached
+      --requests 16 --rate 8 --measure cached \\
+      --trace serve-trace.json --metrics-json serve-metrics.json
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 
 import numpy as np
 
@@ -108,6 +110,12 @@ def main():
                          "measures on-device, off is analytic-only")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write the run's obs trace here (.json -> "
+                         "Perfetto/Chrome form, else versioned JSONL; "
+                         "inspect with tools/trace_view.py)")
+    ap.add_argument("--metrics-json", metavar="PATH", default=None,
+                    help="dump the ServeReport summary as JSON")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -124,11 +132,16 @@ def main():
         output_dist=("uniform", 2, args.max_new),
         concurrency=args.slots, vocab=vocab,
         seed=int(rng.integers(1 << 30)))
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
     engine = ServeEngine(
         args.arch, slots=args.slots, max_len=args.max_len,
         reduced=not args.full, paged=paged,
         spec=BucketSpec(max_len=args.max_len, mode=args.bucket_mode),
-        policy=args.policy, measure=args.measure, verbose=True)
+        policy=args.policy, measure=args.measure, tracer=tracer,
+        verbose=True)
     report = drive(engine, traffic)
     s = report.summary
     print(f"[serve] ttft p50/p95 {s.ttft_p50_s * 1e3:.1f}/"
@@ -137,6 +150,22 @@ def main():
           f"compiles decode={report.compiled_decode_shapes} "
           f"prefill={report.compiled_prefill_shapes}, "
           f"router={report.router_stats}")
+    if tracer is not None:
+        from repro.obs import write_trace
+        path = write_trace(tracer, args.trace)
+        print(f"[serve] trace ({len(tracer.spans())} spans) -> {path}")
+    if args.metrics_json:
+        payload = {
+            "summary": s.as_dict(),
+            "router_stats": report.router_stats,
+            "compiled_decode_shapes": report.compiled_decode_shapes,
+            "compiled_prefill_shapes": report.compiled_prefill_shapes,
+            "pool_growths": report.pool_growths,
+            "n_rejected": len(report.rejected),
+        }
+        with open(args.metrics_json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"[serve] metrics -> {args.metrics_json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,225 @@
+"""Serving-trace feedback: per-bucket step timings into the TraceStore.
+
+This is the paper's loop closed at serving time.  The profiler already
+records *offline* sweeps (``tools/profile.py``); this module turns the
+spans the engine emitted while actually serving traffic into the same
+``Measurement`` records, keyed under the real hardware key, so the next
+cold resolution with ``measure="cached"`` re-ranks candidates against
+what production actually observed (``profiler.cost.hybrid_refine``
+replays the file directly).
+
+Attribution model — deliberately honest about what a serving span is:
+
+  * a ``decode_tick`` span times one full model step (every layer's
+    attention sweep plus MLP and sampling), so the recorded per-kernel
+    seconds are the span duration divided by the layer count — the
+    per-layer cost of the step whose attention mapping the record names;
+  * the record's ``value`` is the plan the step *executed* (the fused
+    ``paged_decode`` ``block_s`` on paged engines, the dense
+    ``decode_block`` otherwise) — executed mappings only, never merely
+    resolved ones;
+  * ``backend=""`` and ``source="serving"``: the empty backend matches
+    every replay mode (fixture semantics in ``MeasuredCost``), the
+    source keeps provenance visible in ``tools/profile.py report``.
+
+Example::
+
+    tracer = load_trace("serve-trace.jsonl")
+    store = TraceStore("serving-traces.jsonl")
+    n = feedback_to_store(tracer.spans(), tracer.meta, hw, store)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Iterable, Optional
+
+from repro.obs.trace import SpanRecord
+from repro.profiler.measure import (Measurement, SYNTH_REGISTRY, TimingStats,
+                                    canon_value)
+
+__all__ = [
+    "BucketObs",
+    "aggregate",
+    "serve_measurements",
+    "feedback_to_store",
+]
+
+#: span names the serve engine emits for its two timed phases.
+DECODE_SPAN = "decode_tick"
+PREFILL_SPAN = "prefill"
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketObs:
+    """Aggregated step timings for one (phase, bucket, executed plan).
+
+    ``kernel``/``value`` name the mapping the steps executed
+    (``paged_decode``/``block_s`` on paged engines, ``decode_attention``
+    /``decode_block`` dense, ``flash_attention``/tiles for prefill);
+    both are ``None`` for attention-free families.  Durations are whole
+    steps (all layers), seconds.
+
+    Example::
+
+        for ob in aggregate(tracer.spans()):
+            print(ob.phase, ob.bucket, ob.kernel, ob.n, ob.median_s)
+    """
+
+    phase: str                  # "decode" | "prefill"
+    bucket: int                 # kv_len (decode) or prompt bucket (prefill)
+    kernel: Optional[str]
+    value: Any                  # executed plan value (canonical)
+    n: int
+    total_s: float
+    mean_s: float
+    median_s: float
+    samples: tuple[float, ...]
+
+
+def _span_kernel(s: SpanRecord) -> tuple[Optional[str], Any]:
+    """The kernel + plan value one serving span actually executed."""
+    a = s.attrs
+    if s.name == PREFILL_SPAN:
+        tiles = a.get("tiles")
+        if tiles is None:
+            return None, None
+        return "flash_attention", canon_value(tiles)
+    pdb = a.get("paged_decode_block")
+    if pdb is not None:
+        return "paged_decode", canon_value(pdb)
+    db = a.get("decode_block")
+    if db is not None:
+        return "decode_attention", canon_value(db)
+    return None, None
+
+
+def aggregate(spans: Iterable[SpanRecord]) -> list[BucketObs]:
+    """Group serving spans by (phase, bucket, executed plan).
+
+    Only ``decode_tick``/``prefill`` spans with a ``bucket`` attribute
+    participate; everything else in the trace is ignored.
+
+    Example::
+
+        rows = aggregate(load_trace("serve-trace.jsonl").spans())
+    """
+    groups: dict[tuple, list[float]] = {}
+    for s in spans:
+        if s.name not in (DECODE_SPAN, PREFILL_SPAN):
+            continue
+        bucket = s.attrs.get("bucket")
+        if bucket is None:
+            continue
+        phase = "prefill" if s.name == PREFILL_SPAN else "decode"
+        kernel, value = _span_kernel(s)
+        groups.setdefault((phase, int(bucket), kernel, value),
+                          []).append(s.dur)
+    out = []
+    for (phase, bucket, kernel, value), durs in sorted(
+            groups.items(), key=lambda kv: (kv[0][0], kv[0][1], str(kv[0][3]))):
+        out.append(BucketObs(
+            phase=phase, bucket=bucket, kernel=kernel, value=value,
+            n=len(durs), total_s=sum(durs),
+            mean_s=statistics.fmean(durs),
+            median_s=statistics.median(durs), samples=tuple(durs)))
+    return out
+
+
+def _kernel_desc(ob: BucketObs, meta: dict) -> Optional[dict]:
+    """Rebuild the tuner workload desc an observation's kernel was
+    resolved against, from the trace meta (None when meta is missing
+    the required geometry)."""
+    try:
+        d = int(meta["head_dim"])
+        dtype = str(meta["dtype"])
+        db = int(meta["dtype_bytes"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    if ob.kernel == "decode_attention":
+        return {"s": ob.bucket, "d": d, "dtype": dtype, "dtype_bytes": db}
+    if ob.kernel == "paged_decode":
+        try:
+            pb = int(meta["page_block"])
+            mbr = int(meta["max_blocks_per_row"])
+        except (KeyError, TypeError, ValueError):
+            return None
+        return {"s": ob.bucket, "d": d, "page_block": pb,
+                "max_blocks_per_row": mbr, "dtype": dtype, "dtype_bytes": db}
+    if ob.kernel == "flash_attention":
+        return {"seq_q": ob.bucket, "seq_kv": ob.bucket, "head_dim": d,
+                "dtype": dtype, "dtype_bytes": db, "causal": True}
+    return None
+
+
+def serve_measurements(spans: Iterable[SpanRecord], meta: dict,
+                       hw) -> list[Measurement]:
+    """Turn serving spans into ``Measurement`` records under ``hw``.
+
+    One record per (phase, bucket, executed plan) group: per-layer step
+    seconds (span duration / ``meta["layers"]``), the kernel's own
+    signature at the rebuilt desc, analytic features from
+    ``SYNTH_REGISTRY`` when registered.  Groups whose kernel or
+    geometry cannot be reconstructed are skipped, never fatal.
+
+    Example::
+
+        ms = serve_measurements(tracer.spans(), tracer.meta, hw)
+        for m in ms:
+            store.add(m)
+    """
+    from repro.tuner.dispatch import KERNEL_REGISTRY
+    from repro.tuner.signature import hardware_key
+
+    hwk = hardware_key(hw)
+    layers = max(1, int(meta.get("layers", 1) or 1))
+    out = []
+    for ob in aggregate(spans):
+        if ob.kernel is None:
+            continue
+        desc = _kernel_desc(ob, meta)
+        spec = KERNEL_REGISTRY.get(ob.kernel)
+        if desc is None or spec is None:
+            continue
+        per_layer = tuple(t / layers for t in ob.samples)
+        flops = byts = None
+        synth = SYNTH_REGISTRY.get(ob.kernel)
+        if synth is not None:
+            try:
+                f, b = synth.features(desc)
+                flops, byts = float(f), float(b)
+            except (KeyError, TypeError):
+                pass
+        out.append(Measurement(
+            kernel=ob.kernel, hw_key=hwk,
+            sig_key=spec.sig(desc, "tuned").key,
+            value=ob.value,
+            stats=TimingStats.from_samples(list(per_layer), warmup=0),
+            desc=desc, programs=None, flops=flops, hbm_bytes=byts,
+            backend="",                 # matches every replay mode
+            interpret=False, source="serving", created=time.time()))
+    return out
+
+
+def feedback_to_store(spans: Iterable[SpanRecord], meta: dict, hw,
+                      store) -> int:
+    """Append serving feedback to a profiler ``TraceStore``.
+
+    Returns the number of records the store accepted (dedupe may drop
+    replays of the same key).  The store file is then directly
+    consumable by ``hybrid_refine(..., mode="cached")`` and
+    ``tools/profile.py report``.
+
+    Example::
+
+        store = TraceStore("serving-traces.jsonl")
+        n = feedback_to_store(tracer.spans(), tracer.meta, hw, store)
+        print(f"recorded {n} serving observations")
+    """
+    added = 0
+    for m in serve_measurements(spans, meta, hw):
+        if store.add(m):
+            added += 1
+    return added

@@ -352,6 +352,29 @@ def _populate_synth() -> None:
         features=lambda d: (4.0 * d["s"] * d["d"],
                             2.0 * d["s"] * d["d"] * d["dtype_bytes"]))
 
+    def paged_make(d):
+        import numpy as np
+        s, hd, pb = d["s"], d["d"], d["page_block"]
+        nb = d["max_blocks_per_row"]
+        q = _rand((1, 1, 1, hd), d["dtype"], 0, 0.2)
+        k = _rand((1, s, 1, hd), d["dtype"], 1, 0.2)
+        v = _rand((1, s, 1, hd), d["dtype"], 2)
+        # a nontrivial page permutation: the indirection must actually
+        # scatter, or fused-vs-gather comparisons measure nothing
+        need = -(-s // pb)
+        rng = np.random.default_rng(3)
+        tb = np.full((1, nb), -1, np.int32)
+        tb[0, :need] = rng.permutation(need).astype(np.int32)
+        return ((q, k, v, jnp.asarray(tb), s), {"page_block": pb})
+
+    SYNTH_REGISTRY["paged_decode"] = SynthSpec(
+        make=paged_make,
+        # grid = (steps, pages-per-step) per row — the fused schedule
+        programs=lambda d, p: (ceil_div(d["s"], int(p))
+                               * max(1, int(p) // d["page_block"])),
+        features=lambda d: (4.0 * d["s"] * d["d"],
+                            2.0 * d["s"] * d["d"] * d["dtype_bytes"]))
+
     SYNTH_REGISTRY["gaussian_blur"] = SynthSpec(
         make=lambda d: ((_rand((d["h"], d["w"]), d["dtype"], 0),),
                         {"ksize": d["ksize"]}),

@@ -29,6 +29,7 @@ from typing import Any, Optional
 from repro.configs.base import ModelConfig
 from repro.core.hw import TpuParams, detect
 from repro.core.mapper import MappingPolicy
+from repro.obs.trace import get_tracer, using_tracer
 from repro.tuner import (ResolveInfo, TuningCache, WorkloadSignature,
                          resolve_plan, workload_signature)
 
@@ -264,7 +265,8 @@ class BucketRouter:
                  policy: MappingPolicy | str = MappingPolicy.TUNED,
                  cache: Optional[TuningCache] = None,
                  measure: str = "off", store: Optional[Any] = None,
-                 page_block: Optional[int] = None):
+                 page_block: Optional[int] = None,
+                 tracer: Optional[Any] = None):
         self.cfg = cfg
         self.spec = spec
         self.slots = slots
@@ -277,6 +279,10 @@ class BucketRouter:
         #: non-paged engines, in which case geometry-keyed rows
         #: (``paged_decode``) resolve to ``None`` in every plan
         self.page_block = page_block
+        #: observability sink — every resolution reports its provenance
+        #: here (warm memo hit vs cold tuner consult); bound at
+        #: construction, the null tracer unless one is installed
+        self.obs = tracer if tracer is not None else get_tracer()
         self.stats = RouterStats()
         self._plans: dict[str, BucketPlan] = {}
         self._prefill_tiles: dict[int, tuple[int, int]] = {}
@@ -338,28 +344,39 @@ class BucketRouter:
         hit = self._plans.get(sig.key)
         if hit is not None:
             self.stats.warm += 1
+            self.obs.instant("bucket_resolve", bucket=bucket.kv_len,
+                             provenance="warm")
             return hit
         self.stats.cold += 1
-        db = self._dtype_bytes()
-        geo = self._geometry()
-        values: dict[str, Any] = {}
-        infos: dict[str, Optional[ResolveInfo]] = {}
-        for row in KERNEL_TABLE:
-            if not row.applies(self.cfg) or (row.needs_geometry
-                                             and geo is None):
-                values[row.kernel], infos[row.kernel] = None, None
-                continue
-            kplan, info = self._resolve_kernel(
-                row.kernel, row.desc(self.cfg, bucket, db, geo))
-            values[row.kernel] = row.extract(kplan)
-            infos[row.kernel] = info
-        plan = BucketPlan(bucket=bucket, sig=sig,
-                          decode_block=values["decode_attention"],
-                          decode_info=infos["decode_attention"],
-                          prefill_blocks=values["flash_attention"],
-                          prefill_info=infos["flash_attention"],
-                          paged_decode_block=values["paged_decode"],
-                          paged_decode_info=infos["paged_decode"])
+        # cold resolutions run under this router's tracer so the
+        # dispatcher's resolve_plan spans nest beneath this one
+        with self.obs.span("bucket_resolve", bucket=bucket.kv_len,
+                           provenance="cold") as sp, \
+                using_tracer(self.obs):
+            db = self._dtype_bytes()
+            geo = self._geometry()
+            values: dict[str, Any] = {}
+            infos: dict[str, Optional[ResolveInfo]] = {}
+            for row in KERNEL_TABLE:
+                if not row.applies(self.cfg) or (row.needs_geometry
+                                                 and geo is None):
+                    values[row.kernel], infos[row.kernel] = None, None
+                    continue
+                kplan, info = self._resolve_kernel(
+                    row.kernel, row.desc(self.cfg, bucket, db, geo))
+                values[row.kernel] = row.extract(kplan)
+                infos[row.kernel] = info
+            plan = BucketPlan(bucket=bucket, sig=sig,
+                              decode_block=values["decode_attention"],
+                              decode_info=infos["decode_attention"],
+                              prefill_blocks=values["flash_attention"],
+                              prefill_info=infos["flash_attention"],
+                              paged_decode_block=values["paged_decode"],
+                              paged_decode_info=infos["paged_decode"])
+            sp.set(decode_block=plan.decode_block,
+                   prefill_blocks=plan.prefill_blocks,
+                   paged_decode_block=plan.paged_decode_block,
+                   probes=plan.probes)
         self._plans[sig.key] = plan
         return plan
 
@@ -383,14 +400,20 @@ class BucketRouter:
         hit = self._prefill_tiles.get(prompt_bucket)
         if hit is not None:
             self.stats.warm += 1
+            self.obs.instant("prefill_resolve", bucket=prompt_bucket,
+                             provenance="warm")
             return hit
         self.stats.cold += 1
         # reuse the table row's declarative desc at the prompt bucket's
         # own (pb, pb) geometry — one source of truth for the flash desc
-        plan, _ = self._resolve_kernel(
-            row.kernel,
-            row.desc(self.cfg, Bucket(self.slots, prompt_bucket),
-                     self._dtype_bytes(), None))
-        tiles = row.extract(plan)
+        with self.obs.span("prefill_resolve", bucket=prompt_bucket,
+                           provenance="cold") as sp, \
+                using_tracer(self.obs):
+            plan, _ = self._resolve_kernel(
+                row.kernel,
+                row.desc(self.cfg, Bucket(self.slots, prompt_bucket),
+                         self._dtype_bytes(), None))
+            tiles = row.extract(plan)
+            sp.set(tiles=tiles)
         self._prefill_tiles[prompt_bucket] = tiles
         return tiles

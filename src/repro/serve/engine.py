@@ -51,6 +51,7 @@ from repro.core.mapper import MappingPolicy
 from repro.launch.mesh import make_local_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import build_model
+from repro.obs.trace import get_tracer
 from repro.runtime import sharding as shd
 from repro.serve.adapters import get_adapter
 from repro.serve.buckets import BucketRouter, BucketSpec
@@ -105,6 +106,15 @@ class ServeEngine:
     tiles back to the GSPMD path (the tuned-vs-default ablation
     ``benchmarks/serve_bench.py`` measures).
 
+    ``tracer`` threads an ``obs.Tracer`` through the whole runtime:
+    every prefill admit and decode tick becomes a span carrying its
+    bucket key and executed plan, router/tuner resolutions record their
+    provenance, and pool growth / slot recycling emit instants — see
+    docs/OBSERVABILITY.md.  ``None`` binds the ambient tracer at
+    construction time (``obs.trace.get_tracer()``, the null tracer by
+    default), so an untraced engine pays constant no-ops and its jitted
+    steps lower to byte-identical HLO (``tests/test_obs.py`` pins this).
+
     Example::
 
         eng = ServeEngine("smollm-135m", slots=4, max_len=256)
@@ -132,6 +142,7 @@ class ServeEngine:
                  use_prefill_tiles: bool = True,
                  eos_id: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic,
+                 tracer: Optional[Any] = None,
                  verbose: bool = False):
         cfg = get_config(arch) if isinstance(arch, str) else arch
         if isinstance(arch, str) and reduced:
@@ -152,6 +163,7 @@ class ServeEngine:
         self._clock = clock
         self._t0: Optional[float] = None
         self._skew = 0.0
+        self.obs = tracer if tracer is not None else get_tracer()
 
         self.model = build_model(cfg)
         self.mesh = mesh if mesh is not None else make_local_mesh(1, 1)
@@ -163,7 +175,8 @@ class ServeEngine:
         self.router = BucketRouter(cfg, self.spec, slots=slots, hw=hw,
                                    policy=policy, cache=tuning_cache,
                                    measure=measure, store=store,
-                                   page_block=block_size if paged else None)
+                                   page_block=block_size if paged else None,
+                                   tracer=self.obs)
         self._block_size = block_size
         self._total_blocks = total_blocks
         self._admission = admission
@@ -220,6 +233,21 @@ class ServeEngine:
         self.compiled_decode_shapes: set[tuple[int, int]] = set()
         self.compiled_prefill_shapes: set[int] = set()
         self.pool_growths = 0
+
+        if self.obs.enabled:
+            # run-level context the trace exporters embed in the header —
+            # everything obs.feedback/obs.drift need to rebuild each
+            # bucket's tuner workload desc offline from the trace alone
+            self.obs.meta.update(
+                arch=cfg.name, family=cfg.family,
+                head_dim=cfg.head_dim,
+                kv_heads=max(cfg.num_kv_heads, 1),
+                layers=cfg.num_layers, dtype=cfg.dtype,
+                dtype_bytes=self.router._dtype_bytes(),
+                slots=slots, max_len=self.spec.max_len,
+                hw=self.router.hw.name, paged=paged,
+                fused_decode=fused_decode,
+                **(self.router._geometry() or {}))
 
     def reset(self) -> None:
         """Clear traffic state but KEEP the warm machinery — jitted
@@ -284,6 +312,8 @@ class ServeEngine:
             if self.adapter.grows_with_len else self._cache
         self.pool.grow(new_len)
         self.pool_growths += 1
+        self.obs.instant("pool_grow", kv_len=new_len)
+        self.obs.count("pool_growths")
         if self.verbose:
             print(f"[serve] pool -> ({self.slots}, {new_len})")
 
@@ -333,11 +363,15 @@ class ServeEngine:
         # router (warm buckets: memo hit, zero probes), jitted static
         tiles = self.router.prefill_tiles(pb) if self.use_prefill_tiles \
             else None
-        t0 = time.perf_counter()
-        logits, rcache = self._prefill(self.params, batch, last,
-                                       prefill_tiles=tiles)
-        logits = jax.block_until_ready(logits)
-        self.metrics.add_prefill_time(time.perf_counter() - t0)
+        with self.obs.span("prefill", rid=req.rid,
+                           prompt_len=req.prompt_len, bucket=pb,
+                           tiles=tiles):
+            t0 = time.perf_counter()
+            logits, rcache = self._prefill(self.params, batch, last,
+                                           prefill_tiles=tiles)
+            logits = jax.block_until_ready(logits)
+            self.metrics.add_prefill_time(time.perf_counter() - t0)
+        self.obs.count("admits")
 
         pm = None
         if self.paged:
@@ -375,13 +409,20 @@ class ServeEngine:
                       # read back to gather-then-sweep (the ablation)
                       paged_decode_block=(plan.paged_decode_block
                                           if self.fused_decode else None))
-        t0 = time.perf_counter()
-        logits, self._cache = self._decode(self.params, dict(self._cache),
-                                           jnp.asarray(self._tokens),
-                                           decode_block=plan.decode_block,
-                                           **kw)
-        logits = jax.block_until_ready(logits)
-        self.metrics.add_decode_time(time.perf_counter() - t0)
+        # the span records the EXECUTED mapping: the fused block_s when
+        # the paged read runs fused, the dense decode_block otherwise
+        with self.obs.span("decode_tick", bucket=self.pool.kv_len,
+                           decode_block=plan.decode_block,
+                           paged_decode_block=kw.get("paged_decode_block"),
+                           live=len(self.scheduler.live), slots=self.slots):
+            t0 = time.perf_counter()
+            logits, self._cache = self._decode(self.params,
+                                               dict(self._cache),
+                                               jnp.asarray(self._tokens),
+                                               decode_block=plan.decode_block,
+                                               **kw)
+            logits = jax.block_until_ready(logits)
+            self.metrics.add_decode_time(time.perf_counter() - t0)
         lg = logits[:, 0] if logits.ndim == 3 else logits
         nxt = np.asarray(jnp.argmax(lg, axis=-1), np.int32)
         live = self.scheduler.live_by_slot()
@@ -390,6 +431,9 @@ class ServeEngine:
                 req.generated.append(int(nxt[slot]))
                 self._tokens[slot, 0] = int(nxt[slot])
         self.metrics.on_step(self._now(), len(live), self.slots)
+        self.obs.count("decode_ticks")
+        self.obs.count("tokens_decoded", len(live))
+        self.obs.gauge("live_slots", len(live))
 
     # -- main loop --------------------------------------------------------
 
@@ -404,6 +448,8 @@ class ServeEngine:
                 if self.paged and slot is not None:
                     self._tables[slot] = -1      # unmap: blocks recycle
                     self._tables_dev = None
+                self.obs.instant("slot_recycle", rid=req.rid, slot=slot,
+                                 generated=len(req.generated))
                 self.outputs[req.rid] = list(req.prompt) + list(req.generated)
                 self.metrics.on_done(req.rid, now, len(req.generated))
                 if on_complete is not None:

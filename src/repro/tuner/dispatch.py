@@ -231,6 +231,41 @@ def resolve_plan(
         block, info = resolve_plan("decode_attention", hw,
                                    MappingPolicy.TUNED, desc)
     """
+    # observability: when a tracer is ambient (obs.trace — the serve
+    # router installs its own around cold resolutions), every resolve
+    # becomes a span carrying provenance + probe spend.  Lazy import:
+    # obs sits above tuner in the layering, and the null-tracer fast
+    # path costs one attribute check.
+    from repro.obs.trace import get_tracer
+
+    tracer = get_tracer()
+    if not tracer.enabled:
+        return _resolve_plan_impl(kernel, hw, policy, desc, cache,
+                                  measure=measure, store=store,
+                                  measure_opts=measure_opts)
+    with tracer.span("resolve_plan", kernel=kernel,
+                     measure=measure) as sp:
+        plan, info = _resolve_plan_impl(kernel, hw, policy, desc, cache,
+                                        measure=measure, store=store,
+                                        measure_opts=measure_opts)
+        sp.set(source=info.source, probes=info.probes,
+               measured=info.measured)
+        return plan, info
+
+
+def _resolve_plan_impl(
+    kernel: str,
+    hw: TpuParams,
+    policy: MappingPolicy | str,
+    desc: dict,
+    cache: Optional[TuningCache] = None,
+    *,
+    measure: str = "off",
+    store: Optional[Any] = None,
+    measure_opts: Optional[dict] = None,
+) -> tuple[Any, ResolveInfo]:
+    """The untraced resolution flow (seed -> cache -> refine -> memoize);
+    ``resolve_plan`` is the public spanned wrapper."""
     spec = KERNEL_REGISTRY[kernel]
     if measure not in MEASURE_MODES:
         raise ValueError(f"measure must be one of {MEASURE_MODES}, "

@@ -1,0 +1,124 @@
+"""Edge-case tests for ``repro.serve.metrics``.
+
+The serving engine's accounting has to stay well-defined on degenerate
+runs — empty percentile inputs, requests that never produced a first
+token, zero/one output tokens, and a run where admission rejected
+everything.  These are pure-Python tests (no jax), so they pin the
+bookkeeping semantics without touching the model stack.
+"""
+
+import math
+
+from repro.serve.metrics import (RequestRecord, ServeMetrics, ServeSummary,
+                                 percentile)
+
+
+class TestPercentile:
+    def test_empty_returns_zero(self):
+        assert percentile([], 50) == 0.0
+        assert percentile([], 0) == 0.0
+        assert percentile([], 100) == 0.0
+
+    def test_singleton_returns_the_value_at_any_q(self):
+        for q in (0, 25, 50, 95, 100):
+            assert percentile([7.25], q) == 7.25
+
+    def test_linear_interpolation(self):
+        vals = [1.0, 2.0, 3.0, 4.0]
+        assert percentile(vals, 50) == 2.5
+        assert percentile(vals, 0) == 1.0
+        assert percentile(vals, 100) == 4.0
+        assert math.isclose(percentile(vals, 95), 3.85)
+
+    def test_unsorted_input(self):
+        assert percentile([3.0, 1.0, 2.0], 50) == 2.0
+
+
+class TestRequestRecordEdges:
+    def test_no_first_token_means_no_ttft_no_tpot(self):
+        r = RequestRecord(rid=0, prompt_tokens=4, arrival=1.0)
+        assert r.ttft is None
+        assert r.tpot is None
+        assert r.queue_wait is None
+
+    def test_admitted_but_never_decoded(self):
+        r = RequestRecord(rid=1, prompt_tokens=4, arrival=1.0, admitted=1.5)
+        assert r.queue_wait == 0.5
+        assert r.ttft is None
+        assert r.tpot is None
+
+    def test_single_output_token_has_ttft_but_no_tpot(self):
+        # TPOT is the cadence AFTER the first token: with one output
+        # token there is no inter-token gap to average over.
+        r = RequestRecord(rid=2, prompt_tokens=4, arrival=0.0,
+                          admitted=0.1, first_token=0.2, done=0.2,
+                          output_tokens=1)
+        assert r.ttft == 0.2
+        assert r.tpot is None
+
+    def test_zero_output_tokens_done_without_first_token(self):
+        # a request can finish (e.g. cancelled) without emitting tokens
+        r = RequestRecord(rid=3, prompt_tokens=4, arrival=0.0,
+                          admitted=0.1, done=0.3, output_tokens=0)
+        assert r.ttft is None
+        assert r.tpot is None
+
+    def test_tpot_divides_by_gaps_not_tokens(self):
+        r = RequestRecord(rid=4, prompt_tokens=4, arrival=0.0,
+                          admitted=0.0, first_token=1.0, done=2.0,
+                          output_tokens=5)
+        assert math.isclose(r.tpot, 1.0 / 4)
+
+
+class TestServeMetricsDegenerateRuns:
+    def test_summary_on_empty_metrics(self):
+        s = ServeMetrics().summary()
+        assert isinstance(s, ServeSummary)
+        assert s.n_requests == 0 and s.n_completed == 0
+        assert s.makespan_s == 0.0 and s.tokens_per_s == 0.0
+        assert s.utilization == 0.0 and s.decode_steps == 0
+
+    def test_all_rejected_run(self):
+        # every request arrives but none is ever admitted: the summary
+        # must stay finite (no div-by-zero) with zeroed latency stats
+        m = ServeMetrics()
+        for rid in range(3):
+            m.on_submit(rid=rid, t=0.1 * rid, prompt_tokens=8)
+        s = m.summary()
+        assert s.n_requests == 3
+        assert s.n_completed == 0
+        assert s.prompt_tokens == 0       # only completed requests count
+        assert s.output_tokens == 0
+        assert s.tokens_per_s == 0.0
+        assert s.ttft_p50_s == 0.0 and s.tpot_p50_s == 0.0
+        assert s.queue_wait_p50_s == 0.0
+        assert math.isclose(s.makespan_s, 0.2)
+
+    def test_requests_without_second_token_excluded_from_tpot(self):
+        m = ServeMetrics()
+        m.on_submit(rid=0, t=0.0, prompt_tokens=4)
+        m.on_admit(0, 0.1)
+        m.on_first_token(0, 0.2)
+        m.on_done(0, 0.2, output_tokens=1)     # tpot undefined
+        m.on_submit(rid=1, t=0.0, prompt_tokens=4)
+        m.on_admit(1, 0.1)
+        m.on_first_token(1, 0.2)
+        m.on_done(1, 1.2, output_tokens=11)    # tpot = 1.0 / 10
+        s = m.summary()
+        assert s.n_completed == 2
+        assert math.isclose(s.tpot_p50_s, 0.1)  # only rid=1 contributes
+
+    def test_utilization_over_steps(self):
+        m = ServeMetrics()
+        m.on_step(0.0, live=1, slots=4)
+        m.on_step(0.1, live=3, slots=4)
+        s = m.summary()
+        assert math.isclose(s.utilization, 4 / 8)
+        assert s.decode_steps == 2
+
+    def test_as_dict_round_trips_fields(self):
+        s = ServeMetrics().summary()
+        d = s.as_dict()
+        assert d["n_requests"] == 0
+        assert set(d) == {f.name for f in
+                          __import__("dataclasses").fields(ServeSummary)}

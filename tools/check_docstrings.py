@@ -1,11 +1,13 @@
 #!/usr/bin/env python
-"""Docstring drift check for the serve/ and tuner/ public APIs (CI-run).
+"""Docstring drift check for the serve/, tuner/ and obs/ public APIs
+(CI-run).
 
 Two rules, enforced by AST inspection (no imports — pure source check,
 a pydocstyle-equivalent scoped to what this repo promises):
 
   1. every PUBLIC module-level class / function / method in
-     ``src/repro/serve`` and ``src/repro/tuner`` has a docstring
+     ``src/repro/serve``, ``src/repro/tuner`` and ``src/repro/obs``
+     has a docstring
      (public = name without a leading underscore; ``__init__`` and
      other dunders are exempt, as are ``@property`` one-liner getters
      whose enclosing class documents them);
@@ -24,7 +26,7 @@ import os
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-PACKAGES = ("src/repro/serve", "src/repro/tuner")
+PACKAGES = ("src/repro/serve", "src/repro/tuner", "src/repro/obs")
 
 #: substrings whose presence marks a docstring as example-bearing
 EXAMPLE_MARKERS = (">>>", "Example::", "Example:", "PYTHONPATH=")

@@ -52,7 +52,51 @@ DEFAULT_WORKLOADS: list[tuple[str, dict]] = [
                 "dtype_bytes": 4}),
     ("rmsnorm", {"tokens": 1024, "d": 512, "dtype": "float32",
                  "dtype_bytes": 4}),
+    ("paged_decode", {"s": 256, "d": 64, "page_block": 16,
+                      "max_blocks_per_row": 16, "dtype": "float32",
+                      "dtype_bytes": 4}),
 ]
+
+
+def _paged_read_ablation(desc: dict, value, hw, interpret: bool,
+                         warmup: int, reps: int):
+    """Time the fused table-consuming read against gather-then-sweep at
+    one ``block_s``, parity-asserted: both paths must produce the same
+    attention output (the CPU fallback runs both on the blocked
+    reference, so the assertion is meaningful without a device)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.paged_decode_attention import paged_decode_attention
+    from repro.kernels.paged_gather import paged_gather
+    from repro.profiler.measure import SYNTH_REGISTRY, time_callable
+
+    (q, kc, vc, tables, clen), _ = SYNTH_REGISTRY["paged_decode"].make(desc)
+    pb, bs = int(desc["page_block"]), int(value)
+    b, nb = int(tables.shape[0]), int(tables.shape[1])
+    # after a gather the cache is in logical order: page j of row b sits
+    # at physical page j, so the second sweep's table is the identity
+    ident = jnp.asarray(np.arange(b * nb, dtype=np.int32).reshape(b, nb))
+
+    fused = jax.jit(lambda q, kc, vc, tb, cl: paged_decode_attention(
+        q, kc, vc, tb, cl, page_block=pb, block_s=bs, interpret=interpret))
+
+    def _gather_then_sweep(q, kc, vc, tb, cl):
+        kg = paged_gather(kc, tb, pb, interpret=interpret)
+        vg = paged_gather(vc, tb, pb, interpret=interpret)
+        return paged_decode_attention(q, kg, vg, ident, cl, page_block=pb,
+                                      block_s=bs, interpret=interpret)
+
+    gathered = jax.jit(_gather_then_sweep)
+    o1 = np.asarray(fused(q, kc, vc, tables, clen))
+    o2 = np.asarray(gathered(q, kc, vc, tables, clen))
+    np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-4)
+    tf = time_callable(lambda: fused(q, kc, vc, tables, clen),
+                       warmup=warmup, reps=reps)
+    tg = time_callable(lambda: gathered(q, kc, vc, tables, clen),
+                       warmup=warmup, reps=reps)
+    return tf, tg
 
 
 def _hw(name: str):
@@ -109,6 +153,17 @@ def cmd_sweep(args) -> int:
                             measure_opts={"interpret": interpret})
         print(f"# {kernel}: roofline pick {res.roofline.best} -> "
               f"measured pick {res.value} ({res.source})")
+        if kernel == "paged_decode":
+            # the PR-6 carried ablation as a one-command sweep extra:
+            # fused table-consuming read vs gather-then-sweep at the
+            # picked block_s, numerically parity-asserted either way
+            tf, tg = _paged_read_ablation(desc, res.value, hw, interpret,
+                                          args.warmup, args.reps)
+            print(f"# paged_decode read ablation @ block_s={res.value}: "
+                  f"fused {_fmt(tf.median_s)} vs gather+sweep "
+                  f"{_fmt(tg.median_s)} "
+                  f"({tg.median_s / max(tf.median_s, 1e-12):.2f}x), "
+                  f"parity OK")
     store.save()
     print(f"# store now holds {len(store)} records")
     return 0
