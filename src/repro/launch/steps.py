@@ -217,6 +217,25 @@ def make_prefill_step(model: Model, plan: Plan, max_len: Optional[int],
     return prefill_step
 
 
+def make_chunk_prefill_step(model: Model, plan: Plan,
+                            flags: Optional[dict] = None):
+    """Chunked-prefill step for the serving engine (see
+    ``Model.prefill_chunk``).  ``prefill_tiles`` is meant to be jitted
+    STATIC like the whole-prompt path; the chunk width C and row-cache
+    length are static by shape, while the start offset (``cache["pos"]``)
+    and ``n_valid`` stay traced — so the compile set is bounded by the
+    (C, cache_len, tiles) lattice, not by prompt lengths."""
+    ctx = make_ctx(plan)
+    ctx.flags.update(flags or {})
+
+    def chunk_prefill_step(params, cache, tokens, n_valid,
+                           prefill_tiles=None):
+        return model.prefill_chunk(params, cache, tokens, n_valid,
+                                   prefill_tiles=prefill_tiles, ctx=ctx)
+
+    return chunk_prefill_step
+
+
 def make_decode_step(model: Model, plan: Plan,
                      flags: Optional[dict] = None):
     """``decode_block`` is the bucket-tuned decode-attention mapping the

@@ -213,6 +213,58 @@ class Model:
             return jnp.take_along_axis(logits, idx, axis=1), cache
         return logits[:, -1:], cache
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Families servable through ``prefill_chunk``.  encdec is out:
+        its cross-KV cache needs the whole encoder pass up front; vlm
+        needs the prefix embeddings concatenated before position 0."""
+        return self.cfg.family in ("dense", "moe", "ssm", "hybrid")
+
+    def prefill_chunk(self, params, cache, tokens, n_valid, *,
+                      prefill_tiles: Optional[tuple[int, int]] = None,
+                      ctx: ShardCtx = NO_SHARD):
+        """Advance a prefill cache by one (B, C) prompt chunk.
+
+        Attention families run a true multi-token chunk step: the
+        chunk's queries sweep the growing cache at the bucket-tuned
+        tiles with a traced start offset, so ONE compilation serves
+        every chunk of every prompt at a given (C, cache_len) shape
+        (``transformer.chunk_prefill_step``).  Recurrent families (ssm,
+        hybrid) scan their own decode step over the chunk tokens — the
+        exact sequential recurrence — with steps ``>= n_valid`` masked
+        out, which bounds their prefill compile set to ONE shape per
+        chunk size instead of one per distinct prompt length.
+
+        ``n_valid`` (traced scalar) is the number of real tokens in the
+        chunk; only tail chunks carry padding.  Returns
+        (logits (B, C, V), updated cache) — the caller reads the true
+        last-token logits at ``[:, n_valid - 1]`` of the final chunk.
+        """
+        cfg, f = self.cfg, self.cfg.family
+        if f in ("dense", "moe"):
+            return tf_mod.chunk_prefill_step(params, cache, tokens, cfg,
+                                             prefill_tiles=prefill_tiles,
+                                             ctx=ctx)
+        if f not in ("ssm", "hybrid"):
+            raise ValueError(f"family {f!r} has no chunked prefill "
+                             f"(see supports_chunked_prefill)")
+        n = jnp.asarray(n_valid, jnp.int32)
+
+        def body(carry, xs):
+            cache = carry
+            tok, i = xs
+            logits, new = self.decode_step(params, cache, tok[:, None],
+                                           ctx=ctx)
+            keep = i < n
+            cache = jax.tree.map(
+                lambda a, b: jnp.where(keep, a, b), new, cache)
+            return cache, logits[:, 0]
+
+        steps = (jnp.moveaxis(tokens, 1, 0),          # (C, B)
+                 jnp.arange(tokens.shape[1]))
+        cache, ys = jax.lax.scan(body, cache, steps)
+        return jnp.moveaxis(ys, 0, 1), cache          # (B, C, V)
+
     def decode_step(self, params, cache, tokens, *, ctx: ShardCtx = NO_SHARD,
                     decode_block: Optional[int] = None,
                     page_tables=None, page_block: Optional[int] = None,

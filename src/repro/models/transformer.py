@@ -20,8 +20,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import moe as moe_mod
-from repro.models.attention import (attention_block, attention_decode,
-                                    attention_specs)
+from repro.models.attention import (_cache_read, _cache_write,
+                                    attention_block, attention_decode,
+                                    attention_specs, _project_qkv,
+                                    tiled_prefill_attention)
 from repro.models.layers import (NO_SHARD, ParamSpec, ShardCtx, embed,
                                  embed_specs, mlp, mlp_specs, rmsnorm,
                                  rope_tables, stack_specs, unembed)
@@ -271,6 +273,74 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
         "v": jax.ShapeDtypeStruct(shape, dtype),
         "pos": jax.ShapeDtypeStruct((), jnp.int32),
     }
+
+
+def chunk_prefill_step(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,                    # (B, C) — one prompt chunk
+    cfg: ModelConfig,
+    *,
+    prefill_tiles: Optional[tuple[int, int]] = None,
+    ctx: ShardCtx = NO_SHARD,
+):
+    """Advance a prefill cache by one C-token prompt chunk.
+
+    The chunk's queries attend over the growing cache (everything written
+    by earlier chunks plus this chunk's own keys) through the same
+    tile-honouring sweep the whole-prompt prefill executes
+    (``tiled_prefill_attention``), with ``q_offset = cache["pos"]`` kept
+    TRACED — one compilation serves every chunk of every prompt at a
+    given (chunk, cache_len) shape.  The chunk's k/v land in the cache at
+    positions ``pos .. pos+C-1`` via the same positional write the decode
+    path uses.
+
+    Tail chunks may carry right-padding: padded queries compute garbage
+    rows that the caller discards (per-query attention is independent),
+    and the garbage k/v they write sit at positions ``>= prompt_len``
+    that causal masking hides from every valid query — the serving
+    engine's ``write_row`` then copies only real positions into the
+    pool.  No validity mask is needed inside the step.
+
+    Returns (logits (B, C, V), updated cache).  The caller reads the
+    true last-token logits at index ``n_valid - 1`` of the final chunk.
+    """
+    b, c = tokens.shape
+    x = embed(params["embed"], tokens)
+    x = ctx.p(x, "batch", None, "embed")
+    start = cache["pos"]                                  # scalar, traced
+    pos = start + jnp.arange(c)
+    cos_g, sin_g = rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+    cos_l, sin_l = rope_tables(pos, cfg.head_dim, LOCAL_ROPE_THETA)
+    flags = layer_flags(cfg)
+    # default tiles: one query tile over the chunk, keys swept in 512s —
+    # the untiled reference schedule (serving always passes tuned tiles)
+    bq, bk = prefill_tiles if prefill_tiles is not None else (c, 512)
+
+    def body(x, xs):
+        layer_params, is_global, k_c, v_c = opt_barrier(xs)
+        cos = jnp.where(is_global, cos_g, cos_l) if cfg.local_global_ratio else cos_g
+        sin = jnp.where(is_global, sin_g, sin_l) if cfg.local_global_ratio else sin_g
+        h = rmsnorm(x, layer_params["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(layer_params["attn"], h, cfg, cos, sin, ctx)
+        k_c = _cache_write(k_c, k, start)
+        v_c = _cache_write(v_c, v, start)
+        o = tiled_prefill_attention(
+            q, _cache_read(k_c, x.dtype), _cache_read(v_c, x.dtype),
+            block_q=bq, block_k=bk, causal=True,
+            window=_layer_window(cfg, is_global), q_offset=start)
+        a = jnp.einsum("bshk,hkd->bsd", o.reshape(b, c, -1, cfg.head_dim),
+                       layer_params["attn"]["wo"])
+        x = x + a
+        h = rmsnorm(x, layer_params["ln2"], cfg.norm_eps)
+        m, _ = _mlp_or_moe(layer_params, cfg, h, ctx)
+        return x + m, (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["blocks"], flags, cache["k"], cache["v"]))
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, ctx)
+    return logits, {"k": k_new, "v": v_new, "pos": start + c}
 
 
 def decode_step(

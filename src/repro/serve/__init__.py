@@ -18,6 +18,8 @@ the thing that picks each shape bucket's kernel plans:
                  export block tables the kernels scatter/gather through,
   ``scheduler``  FIFO queue + admission control + slot recycling,
   ``engine``     the prefill/decode interleaving loop itself,
+  ``retune``     live in-flight retuning: drift-triggered re-resolve +
+                 A/B-guarded plan hot-swap between decode ticks,
   ``traffic``    synthetic Poisson workloads (open/closed loop),
   ``metrics``    TTFT / TPOT / throughput / utilization accounting.
 """
@@ -29,6 +31,8 @@ from repro.serve.buckets import (Bucket, BucketPlan, BucketRouter,
                                  RouterStats)
 from repro.serve.engine import ServeEngine, ServeReport
 from repro.serve.kvcache import BlockAllocator, KVCachePool, Lease
+from repro.serve.retune import (RETUNE_MODES, RetuneConfig, RetuneController,
+                                RetuneStats, SwapDecision)
 from repro.serve.metrics import (RequestRecord, ServeMetrics, ServeSummary,
                                  percentile)
 from repro.serve.scheduler import ADMISSION_MODES, Request, Scheduler
@@ -52,7 +56,12 @@ __all__ = [
     "percentile",
     "Request",
     "RequestRecord",
+    "RETUNE_MODES",
+    "RetuneConfig",
+    "RetuneController",
+    "RetuneStats",
     "RouterStats",
+    "SwapDecision",
     "Scheduler",
     "ServeEngine",
     "ServeMetrics",

@@ -242,6 +242,7 @@ class RouterStats:
     warm: int = 0            # served from the router's own plan table
     probes: int = 0          # refine probes spent across all resolutions
     cache_hits: int = 0      # tuner resolutions answered by the TuningCache
+    swaps: int = 0           # live plan hot-swaps (retune controller)
 
 
 class BucketRouter:
@@ -379,6 +380,35 @@ class BucketRouter:
                    probes=plan.probes)
         self._plans[sig.key] = plan
         return plan
+
+    #: which ``BucketPlan`` field each retunable kernel's value lives in
+    #: (prefill tiles are resolved per prompt bucket, not per plan, and
+    #: the retune trial loop measures decode ticks — so only the decode
+    #: kernels are hot-swappable)
+    SWAP_FIELDS = {"decode_attention": "decode_block",
+                   "paged_decode": "paged_decode_block"}
+
+    def swap_plan(self, bucket: Bucket, kernel: str, value) -> BucketPlan:
+        """Hot-swap one kernel's resolved value in a bucket's memoized
+        plan (the retune controller's actuation path).  The swapped plan
+        replaces the memo entry, so the engine's next ``resolve`` of the
+        same bucket returns it warm; other buckets are untouched — their
+        static jit arguments (and therefore their lowered HLO) cannot
+        change.  Returns the new plan.
+
+        Example::
+
+            router.swap_plan(router.bucket(256), "paged_decode", 4)
+        """
+        field = self.SWAP_FIELDS[kernel]
+        plan = self.resolve(bucket)
+        new = dataclasses.replace(plan, **{field: value})
+        self._plans[plan.sig.key] = new
+        self.stats.swaps += 1
+        self.obs.instant("plan_swap", bucket=bucket.kv_len, kernel=kernel,
+                         field=field, value=value)
+        self.obs.count("plan_swaps")
+        return new
 
     def prefill_tiles(self, prompt_bucket: int) -> Optional[tuple[int, int]]:
         """The EXECUTED prefill mapping for one prompt bucket: the flash

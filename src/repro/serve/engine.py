@@ -49,7 +49,8 @@ from repro.configs.base import ModelConfig, ShapeConfig, get_config
 from repro.core.hw import TpuParams
 from repro.core.mapper import MappingPolicy
 from repro.launch.mesh import make_local_mesh
-from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.launch.steps import (make_chunk_prefill_step, make_decode_step,
+                                make_prefill_step)
 from repro.models import build_model
 from repro.obs.trace import get_tracer
 from repro.runtime import sharding as shd
@@ -57,10 +58,28 @@ from repro.serve.adapters import get_adapter
 from repro.serve.buckets import BucketRouter, BucketSpec
 from repro.serve.kvcache import KVCachePool
 from repro.serve.metrics import ServeMetrics, ServeSummary
+from repro.serve.retune import RetuneConfig, RetuneController
 from repro.serve.scheduler import Request, Scheduler
 from repro.tuner import TuningCache
 
 __all__ = ["ServeEngine", "ServeReport"]
+
+
+@dataclasses.dataclass
+class _ChunkTask:
+    """One in-flight chunked prefill: a request whose prompt advances
+    chunk-by-chunk between decode ticks instead of stalling the pool.
+    The request holds its leased slot/blocks from admission, but decode
+    skips it until ``write_row`` lands the finished row."""
+
+    req: Request
+    cache: Any                     # private B=1 row cache (length pb)
+    toks: np.ndarray               # (prompt_len,) prompt tokens
+    pb: int                        # row-cache length (prompt bucket)
+    tiles: Optional[tuple]         # tuned flash tiles (static jit arg)
+    chunk: int                     # chunk width C (static by shape)
+    blocks: Optional[list] = None  # leased block ids (paged pools)
+    done: int = 0                  # prompt tokens consumed so far
 
 
 @dataclasses.dataclass
@@ -81,6 +100,12 @@ class ServeReport:
     compiled_decode_shapes: int
     compiled_prefill_shapes: int
     pool_growths: int
+    #: distinct chunked-prefill compilations (C, cache_len, tiles) — the
+    #: bounded set chunking buys for exact-length families (0 when off)
+    compiled_chunk_shapes: int = 0
+    #: retune controller accounting + concluded swap decisions
+    #: (``None`` when the engine runs with ``retune="off"``)
+    retune: Optional[dict] = None
 
 
 class ServeEngine:
@@ -143,6 +168,8 @@ class ServeEngine:
                  eos_id: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic,
                  tracer: Optional[Any] = None,
+                 retune: str | RetuneConfig | None = "off",
+                 prefill_chunk: int | str | None = None,
                  verbose: bool = False):
         cfg = get_config(arch) if isinstance(arch, str) else arch
         if isinstance(arch, str) and reduced:
@@ -164,6 +191,16 @@ class ServeEngine:
         self._t0: Optional[float] = None
         self._skew = 0.0
         self.obs = tracer if tracer is not None else get_tracer()
+        self._retune_cfg: Optional[RetuneConfig] = None
+        if retune not in (None, "off"):
+            self._retune_cfg = retune if isinstance(retune, RetuneConfig) \
+                else RetuneConfig(mode=retune)
+            if not self.obs.enabled:
+                # the controller's drift scan reads spans; a retuning
+                # engine with no tracer gets a private one (host-side
+                # only — the compiled steps are unaffected)
+                from repro.obs.trace import Tracer
+                self.obs = Tracer()
 
         self.model = build_model(cfg)
         self.mesh = mesh if mesh is not None else make_local_mesh(1, 1)
@@ -221,6 +258,29 @@ class ServeEngine:
                                static_argnames=("decode_block",
                                                 "page_block",
                                                 "paged_decode_block"))
+        #: chunked prefill: None = whole-prompt (today's path); an int is
+        #: the chunk width; "auto" derives it from the tuned flash tiles
+        #: (block_q — prefill advances in the tile quanta the tuner chose)
+        if prefill_chunk is not None and not isinstance(prefill_chunk, int) \
+                and prefill_chunk != "auto":
+            raise ValueError(f"prefill_chunk must be None, an int, or "
+                             f"'auto', got {prefill_chunk!r}")
+        self._chunk_cfg = prefill_chunk
+        self._chunked = (prefill_chunk is not None
+                         and self.model.supports_chunked_prefill)
+        self._chunk_step = jax.jit(
+            make_chunk_prefill_step(self.model, self.plan),
+            static_argnames=("prefill_tiles",))
+        self._chunk_tasks: list[_ChunkTask] = []
+        self._prefilling: dict[int, _ChunkTask] = {}      # rid -> task
+        self.compiled_chunk_shapes: set[tuple] = set()
+
+        self.retune: Optional[RetuneController] = None
+        if self._retune_cfg is not None:
+            self.retune = RetuneController(self.router,
+                                           config=self._retune_cfg,
+                                           tracer=self.obs, store=store,
+                                           cache=tuning_cache)
         self._cache = self.adapter.init_pool(self.model, slots, kv0,
                                              expand_kv=self.plan.expand_kv)
         self._tables = np.full((slots, self.pool.max_blocks_per_row), -1,
@@ -272,6 +332,8 @@ class ServeEngine:
         self.pool_growths = 0
         self._t0 = None
         self._skew = 0.0
+        self._chunk_tasks = []
+        self._prefilling = {}
 
     # -- time -------------------------------------------------------------
 
@@ -351,6 +413,9 @@ class ServeEngine:
     # -- admission + prefill ----------------------------------------------
 
     def _admit(self, req: Request, now: float) -> None:
+        if self._chunked:
+            self._admit_chunked(req, now)
+            return
         pb = self.adapter.prefill_len(req.prompt_len,
                                       self.router.quantize_prompt)
         toks = np.zeros((1, pb), np.int32)
@@ -389,6 +454,95 @@ class ServeEngine:
         self.metrics.on_admit(req.rid, now)
         self.metrics.on_first_token(req.rid, t)
 
+    # -- chunked prefill --------------------------------------------------
+
+    def _chunk_size(self, tiles: Optional[tuple]) -> int:
+        if isinstance(self._chunk_cfg, int):
+            return max(1, self._chunk_cfg)
+        # "auto": the tuned tile's block_q — the quantum the tuner
+        # already decided a prefill sweep should advance in (32 for
+        # attention-free families, which have no tile decision)
+        return int(tiles[0]) if tiles else 32
+
+    def _admit_chunked(self, req: Request, now: float) -> None:
+        """Seat the request (slot + blocks leased, capacity held) but
+        run its prefill chunk-by-chunk between decode ticks instead of
+        all at once.  Until the row lands, decode skips the request;
+        interim decode writes into the leased row are provably dead —
+        ``write_row`` replaces every length key / recurrent state and
+        resets the row's ``pos`` when the prefill completes."""
+        if self.adapter.prefill_buckets:
+            pb = self.adapter.prefill_len(req.prompt_len,
+                                          self.router.quantize_prompt)
+        else:
+            # exact-length families: the private row cache is
+            # length-free, so no bucketing is needed — chunking itself
+            # bounds the compile set (one shape per chunk width)
+            pb = req.prompt_len
+        tiles = self.router.prefill_tiles(pb) if self.use_prefill_tiles \
+            else None
+        blocks = None
+        if self.paged:
+            blocks = self.pool.lease(req.rid).blocks
+            self._tables[req.slot] = self.pool.block_table(req.rid)
+            self._tables_dev = None
+        cache = self.model.init_cache(1, pb,
+                                      expand_kv=self.plan.expand_kv)
+        task = _ChunkTask(req=req, cache=cache,
+                          toks=np.asarray(req.prompt, np.int32), pb=pb,
+                          tiles=tiles, chunk=self._chunk_size(tiles),
+                          blocks=blocks)
+        self._chunk_tasks.append(task)
+        self._prefilling[req.rid] = task
+        self.metrics.on_admit(req.rid, now)
+        self.obs.count("admits")
+
+    def _prefill_tick(self) -> bool:
+        """Advance the oldest in-flight chunked prefill by ONE chunk —
+        the interleaving quantum: at most one chunk of prefill work runs
+        between consecutive decode ticks, so a long prompt can no longer
+        stall the pool for its whole length."""
+        if not self._chunk_tasks:
+            return False
+        task = self._chunk_tasks[0]
+        c, start = task.chunk, task.done
+        n = min(c, len(task.toks) - start)
+        buf = np.zeros((1, c), np.int32)
+        buf[0, :n] = task.toks[start:start + n]
+        cache_len = task.pb if self.adapter.grows_with_len else 0
+        self.compiled_chunk_shapes.add((c, cache_len, task.tiles))
+        with self.obs.span("prefill_chunk", rid=task.req.rid,
+                           bucket=task.pb, chunk=c, start=start,
+                           tiles=task.tiles):
+            t0 = time.perf_counter()
+            logits, task.cache = self._chunk_step(
+                self.params, task.cache, jnp.asarray(buf), jnp.int32(n),
+                prefill_tiles=task.tiles)
+            logits = jax.block_until_ready(logits)
+            self.metrics.add_prefill_time(time.perf_counter() - t0)
+        task.done += n
+        if task.done >= len(task.toks):
+            self._finish_chunked(task, logits, n)
+        return True
+
+    def _finish_chunked(self, task: _ChunkTask, logits, n: int) -> None:
+        req = task.req
+        pm = None
+        if self.paged:
+            pm = self._page_map(task.blocks, req.prompt_len)
+        self._cache = self.adapter.write_row(self._cache, req.slot,
+                                             task.cache, req.prompt_len,
+                                             self.pool.kv_len, page_map=pm)
+        first = int(jnp.argmax(logits[0, n - 1]))
+        req.generated.append(first)
+        self._tokens[req.slot, 0] = first
+        self.metrics.on_first_token(req.rid, self._now())
+        self.obs.instant("prefill_complete", rid=req.rid,
+                         prompt_len=req.prompt_len, chunk=task.chunk,
+                         chunks=-(-len(task.toks) // task.chunk))
+        self._chunk_tasks.pop(0)
+        del self._prefilling[req.rid]
+
     # -- decode -----------------------------------------------------------
 
     def _decode_tick(self) -> None:
@@ -422,18 +576,34 @@ class ServeEngine:
                                                decode_block=plan.decode_block,
                                                **kw)
             logits = jax.block_until_ready(logits)
-            self.metrics.add_decode_time(time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            self.metrics.add_decode_time(dt)
+        if self.retune is not None:
+            # the tick's EXECUTED mapping (mirrors the span attribution):
+            # the fused block_s when the paged read ran fused, the dense
+            # decode_block otherwise, nothing for attention-free families
+            pdb = kw.get("paged_decode_block")
+            kernel, value = (("paged_decode", pdb) if pdb is not None
+                             else ("decode_attention", plan.decode_block)
+                             if plan.decode_block is not None
+                             else (None, None))
+            self.retune.observe_tick(self.pool.kv_len, kernel, value, dt)
         lg = logits[:, 0] if logits.ndim == 3 else logits
         nxt = np.asarray(jnp.argmax(lg, axis=-1), np.int32)
         live = self.scheduler.live_by_slot()
+        n_dec = 0
         for slot, req in live.items():
-            if not req.done:
+            # rows still chunk-prefilling ride the step (their leased
+            # row is overwritten by write_row at completion) but their
+            # outputs are not real tokens yet
+            if not req.done and req.rid not in self._prefilling:
                 req.generated.append(int(nxt[slot]))
                 self._tokens[slot, 0] = int(nxt[slot])
-        self.metrics.on_step(self._now(), len(live), self.slots)
+                n_dec += 1
+        self.metrics.on_step(self._now(), n_dec, self.slots)
         self.obs.count("decode_ticks")
-        self.obs.count("tokens_decoded", len(live))
-        self.obs.gauge("live_slots", len(live))
+        self.obs.count("tokens_decoded", n_dec)
+        self.obs.gauge("live_slots", n_dec)
 
     # -- main loop --------------------------------------------------------
 
@@ -476,10 +646,16 @@ class ServeEngine:
         steps = 0
         while not self.scheduler.idle:
             self._admit_ready()
-            if self.scheduler.live:
+            # one prefill chunk per loop iteration, interleaved with the
+            # decode tick below — long prompts advance without ever
+            # stalling the decoding pool for their whole length
+            stepped = self._prefill_tick()
+            decodable = any(r.rid not in self._prefilling
+                            for r in self.scheduler.live)
+            if decodable:
                 self._decode_tick()
                 self._retire_finished(on_complete)
-            else:
+            elif not stepped:
                 nxt = self.scheduler.next_arrival
                 if nxt is not None:
                     self._fast_forward(nxt)    # idle: jump to next arrival
@@ -489,6 +665,10 @@ class ServeEngine:
                     self.scheduler.shed_head()
                 else:
                     break
+            if self.retune is not None and self.retune.poll():
+                # the router's table changed under us (trial start or
+                # revert): drop the plan memo so the next tick re-reads it
+                self._plan_len = -1
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
@@ -511,5 +691,11 @@ class ServeEngine:
             router_stats=dataclasses.asdict(self.router.stats),
             compiled_decode_shapes=len(self.compiled_decode_shapes),
             compiled_prefill_shapes=len(self.compiled_prefill_shapes),
+            compiled_chunk_shapes=len(self.compiled_chunk_shapes),
             pool_growths=self.pool_growths,
+            retune=(None if self.retune is None else {
+                "stats": dataclasses.asdict(self.retune.stats),
+                "decisions": [dataclasses.asdict(d)
+                              for d in self.retune.decisions],
+            }),
         )

@@ -94,19 +94,40 @@ def _sig_key(sig: Union[WorkloadSignature, str]) -> str:
 def file_lock(path: str):
     """Advisory lock around load-merge-replace; no-op where fcntl is
     unavailable (atomic replace still prevents torn reads).  Shared with
-    ``profiler.store``, which persists with the same semantics."""
+    ``profiler.store``, which persists with the same semantics.
+
+    The ``.lock`` sidecar is removed on release so saves don't litter
+    zero-byte files next to every store.  Removal is safe against the
+    unlink/reopen race: the holder re-checks (by inode) that the file it
+    locked is still the file at ``path`` — a waiter that locked a
+    just-unlinked sidecar retries on a fresh one."""
     try:
         import fcntl
     except ImportError:          # non-POSIX: rely on os.replace atomicity
         yield
         return
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    with open(path, "a") as f:
-        fcntl.flock(f, fcntl.LOCK_EX)
+    while True:
+        f = open(path, "a")
         try:
-            yield
+            fcntl.flock(f, fcntl.LOCK_EX)
+            try:
+                if os.stat(path).st_ino != os.fstat(f.fileno()).st_ino:
+                    continue     # holder unlinked it under us: retry
+            except FileNotFoundError:
+                continue
+            try:
+                yield
+            finally:
+                # unlink BEFORE unlock: the name disappears while we
+                # still hold the lock, so no new waiter can lock the
+                # doomed inode after we let go
+                with contextlib.suppress(FileNotFoundError):
+                    os.unlink(path)
+                fcntl.flock(f, fcntl.LOCK_UN)
+            return
         finally:
-            fcntl.flock(f, fcntl.LOCK_UN)
+            f.close()
 
 
 class TuningCache:

@@ -1,0 +1,410 @@
+"""Live-retune subsystem invariants (``repro.serve.retune``).
+
+Three layers of guarantees:
+
+  * the router hot-swap itself — ``BucketRouter.swap_plan`` replaces
+    exactly one decision field of one bucket's plan, visibly to the next
+    resolve, and nothing else;
+  * the A/B guard — the controller adopts a strictly-faster candidate,
+    never a slower one, never swaps without incumbent evidence, reverts
+    trials whose bucket went cold, enforces cooldown against flapping,
+    and persists adopted values with ``source="retune"`` provenance;
+  * the engine integration — token streams are exact with the controller
+    enabled, and the lowered decode HLO of non-swapped buckets is
+    byte-identical with retuning on (the controller is host-side
+    bookkeeping between ticks, never inside jitted code);
+
+plus ``DriftReport.candidates`` edge cases (the scan's input): empty
+traces, single-sample buckets, the strict-inequality threshold boundary,
+and kernels whose roofline rejects the executed value.
+"""
+
+import dataclasses
+import math
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.hw import TPU_REGISTRY
+from repro.obs import Tracer, drift_report
+from repro.obs.drift import DriftRecord, DriftReport
+from repro.serve import BucketRouter, BucketSpec, RetuneConfig, RetuneController
+from repro.tuner import TuningCache
+
+HW = TPU_REGISTRY["cpu_sim"]
+
+
+@pytest.fixture()
+def router():
+    cfg = get_config("smollm-135m").reduced()
+    return BucketRouter(cfg, BucketSpec(max_len=256), slots=2, hw=HW,
+                        cache=TuningCache(path=None))
+
+
+def _controller(router, **kw):
+    kw.setdefault("mode", "inline")
+    kw.setdefault("min_samples", 4)
+    kw.setdefault("trial_ticks", 3)
+    kw.setdefault("warmup_ticks", 1)
+    kw.setdefault("cooldown_ticks", 8)
+    kw.setdefault("interval_ticks", 10_000)   # drift scan out of the way
+    return RetuneController(router, config=RetuneConfig(**kw),
+                            tracer=Tracer(), cache=TuningCache(path=None))
+
+
+def _incumbent(router, kv=128, kernel="decode_attention"):
+    plan = router.resolve(router.bucket(kv))
+    return getattr(plan, router.SWAP_FIELDS[kernel])
+
+
+def _bank(ctl, kv, kernel, value, dur, n=6):
+    for _ in range(n):
+        ctl.observe_tick(kv, kernel, value, dur)
+
+
+# --------------------------------------------------------------------------- #
+# Router hot-swap
+# --------------------------------------------------------------------------- #
+
+
+class TestSwapPlan:
+    def test_swap_replaces_one_field_visibly(self, router):
+        b = router.bucket(128)
+        before = router.resolve(b)
+        new = router.swap_plan(b, "decode_attention", 16)
+        assert new.decode_block == 16
+        assert router.resolve(b).decode_block == 16       # table updated
+        # nothing else moved
+        assert new.prefill_blocks == before.prefill_blocks
+        assert new.sig.key == before.sig.key
+        assert router.stats.swaps == 1
+
+    def test_swap_is_per_bucket(self, router):
+        b1, b2 = router.bucket(64), router.bucket(128)
+        assert b1.kv_len != b2.kv_len
+        before2 = router.resolve(b2).decode_block
+        router.swap_plan(b1, "decode_attention", 16)
+        assert router.resolve(b2).decode_block == before2
+
+    def test_unknown_kernel_rejected(self, router):
+        with pytest.raises(KeyError):
+            router.swap_plan(router.bucket(128), "flash_attention", (8, 8))
+
+    def test_swap_emits_obs_instant(self):
+        cfg = get_config("smollm-135m").reduced()
+        tr = Tracer()
+        r = BucketRouter(cfg, BucketSpec(max_len=256), slots=2, hw=HW,
+                         cache=TuningCache(path=None), tracer=tr)
+        r.swap_plan(r.bucket(128), "decode_attention", 16)
+        swaps = [s for s in tr.spans() if s.name == "plan_swap"]
+        assert len(swaps) == 1
+        assert swaps[0].attrs["kernel"] == "decode_attention"
+        assert swaps[0].attrs["value"] == 16
+
+
+# --------------------------------------------------------------------------- #
+# The A/B guard
+# --------------------------------------------------------------------------- #
+
+
+class TestABGuard:
+    def test_adopts_strictly_faster_candidate(self, router):
+        ctl = _controller(router)
+        inc = _incumbent(router)
+        cand = 16 if inc != 16 else 32
+        _bank(ctl, 128, "decode_attention", inc, 1e-3)
+        ctl.propose(128, "decode_attention", cand)
+        assert ctl.poll()                       # trial starts: plan swapped
+        assert _incumbent(router) == cand       # candidate is live
+        _bank(ctl, 128, "decode_attention", cand, 1e-4)   # 10x faster
+        assert not ctl.poll()                   # adopt keeps the live plan
+        assert _incumbent(router) == cand
+        assert ctl.stats.adopted == 1 and ctl.stats.rejected == 0
+        (d,) = ctl.decisions
+        assert d.adopted and d.reason == "adopted"
+        assert d.candidate_s < d.incumbent_s
+
+    def test_never_adopts_slower_candidate(self, router):
+        ctl = _controller(router)
+        inc = _incumbent(router)
+        cand = 16 if inc != 16 else 32
+        _bank(ctl, 128, "decode_attention", inc, 1e-4)
+        ctl.propose(128, "decode_attention", cand)
+        assert ctl.poll()
+        _bank(ctl, 128, "decode_attention", cand, 1e-3)   # 10x slower
+        assert ctl.poll()                       # revert swaps incumbent back
+        assert _incumbent(router) == inc
+        assert ctl.stats.rejected == 1 and ctl.stats.adopted == 0
+        (d,) = ctl.decisions
+        assert not d.adopted and d.reason == "slower"
+
+    def test_hysteresis_keeps_incumbent_on_marginal_wins(self, router):
+        # 1% faster is inside the default 2% hysteresis band: reverted
+        ctl = _controller(router, hysteresis=0.98)
+        inc = _incumbent(router)
+        cand = 16 if inc != 16 else 32
+        _bank(ctl, 128, "decode_attention", inc, 1.00e-3)
+        ctl.propose(128, "decode_attention", cand)
+        assert ctl.poll()
+        _bank(ctl, 128, "decode_attention", cand, 0.99e-3)
+        ctl.poll()
+        assert _incumbent(router) == inc
+        assert ctl.stats.rejected == 1
+
+    def test_never_swaps_without_incumbent_evidence(self, router):
+        ctl = _controller(router)                 # min_samples=4, none banked
+        inc = _incumbent(router)
+        ctl.propose(128, "decode_attention", 16 if inc != 16 else 32)
+        assert not ctl.poll()
+        assert _incumbent(router) == inc
+        assert ctl.stats.trials == 0 and ctl.stats.skipped == 1
+
+    def test_cooldown_blocks_immediate_reproposal(self, router):
+        ctl = _controller(router, cooldown_ticks=50)
+        inc = _incumbent(router)
+        cand = 16 if inc != 16 else 32
+        _bank(ctl, 128, "decode_attention", inc, 1e-4)
+        ctl.propose(128, "decode_attention", cand)
+        ctl.poll()
+        _bank(ctl, 128, "decode_attention", cand, 1e-3)
+        ctl.poll()                                # verdict: rejected
+        assert ctl.stats.trials == 1
+        ctl.propose(128, "decode_attention", cand)   # immediately again
+        assert not ctl.poll()                     # cooling: dropped
+        assert ctl.stats.trials == 1
+        _bank(ctl, 128, "decode_attention", inc, 1e-4, n=60)  # cooldown ends
+        ctl.propose(128, "decode_attention", cand)
+        assert ctl.poll()                         # now it trials again
+        assert ctl.stats.trials == 2
+
+    def test_trial_timeout_reverts_cold_bucket(self, router):
+        ctl = _controller(router, trial_timeout_ticks=5)
+        inc = _incumbent(router)
+        cand = 16 if inc != 16 else 32
+        _bank(ctl, 128, "decode_attention", inc, 1e-3)
+        ctl.propose(128, "decode_attention", cand)
+        assert ctl.poll()
+        # the bucket goes cold: ticks happen elsewhere, no candidate
+        # samples ever arrive
+        _bank(ctl, 256, "decode_attention", _incumbent(router, 256), 1e-3,
+              n=10)
+        assert ctl.poll()                         # timeout: incumbent back
+        assert _incumbent(router) == inc
+        assert ctl.stats.reverted == 1
+        (d,) = ctl.decisions
+        assert d.reason == "timeout" and math.isnan(d.candidate_s)
+
+    def test_noop_when_candidate_equals_incumbent(self, router):
+        ctl = _controller(router)
+        inc = _incumbent(router)
+        _bank(ctl, 128, "decode_attention", inc, 1e-3)
+        ctl.propose(128, "decode_attention", inc)
+        assert not ctl.poll()
+        assert ctl.stats.noop == 1 and ctl.stats.trials == 0
+
+    def test_adoption_persists_with_retune_provenance(self, router):
+        cache = TuningCache(path=None)
+        ctl = _controller(router)
+        ctl._cache = cache
+        inc = _incumbent(router)
+        cand = 16 if inc != 16 else 32
+        _bank(ctl, 128, "decode_attention", inc, 1e-3)
+        ctl.propose(128, "decode_attention", cand)
+        ctl.poll()
+        _bank(ctl, 128, "decode_attention", cand, 1e-4)
+        ctl.poll()
+        assert ctl.stats.adopted == 1
+        entries = [e for e in cache._mem.values()
+                   if e.get("source") == "retune"]
+        assert len(entries) == 1
+        e = entries[0]
+        assert e["plan"]["value"] == cand
+        assert e["cost"] < e["seed_cost"]       # adopted means faster
+        assert e["probes"] == 0                 # measured on real traffic
+
+    def test_warmup_ticks_discard_compile_tick(self, router):
+        ctl = _controller(router, trial_ticks=2, warmup_ticks=1)
+        inc = _incumbent(router)
+        cand = 16 if inc != 16 else 32
+        _bank(ctl, 128, "decode_attention", inc, 1e-3)
+        ctl.propose(128, "decode_attention", cand)
+        ctl.poll()
+        # first candidate tick is pathological (compile): must not count
+        ctl.observe_tick(128, "decode_attention", cand, 10.0)
+        ctl.observe_tick(128, "decode_attention", cand, 1e-4)
+        ctl.observe_tick(128, "decode_attention", cand, 1e-4)
+        ctl.poll()
+        (d,) = ctl.decisions
+        assert d.adopted, "compile tick leaked into the trial median"
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            RetuneConfig(mode="sometimes")
+        with pytest.raises(ValueError):
+            RetuneConfig(hysteresis=1.5)
+        with pytest.raises(ValueError):
+            RetuneConfig(trial_ticks=0)
+
+
+# --------------------------------------------------------------------------- #
+# Drift-candidate edge cases (the scan's input contract)
+# --------------------------------------------------------------------------- #
+
+META = {"layers": 1, "head_dim": 64, "dtype": "float32", "dtype_bytes": 4}
+
+
+def _tick_span(tracer, bucket, block, dur):
+    with tracer.span("decode_tick", bucket=bucket, decode_block=block):
+        pass
+    rec = tracer._ring.pop()                # rewrite the recorded duration
+    tracer._ring.append(dataclasses.replace(rec, dur=dur))
+
+
+class TestDriftCandidateEdges:
+    def test_empty_trace_yields_empty_report(self):
+        rep = drift_report([], META, HW)
+        assert rep.rows == ()
+        assert rep.candidates(1.5) == []
+
+    def test_single_sample_bucket_is_its_own_fleet(self):
+        tr = Tracer()
+        _tick_span(tr, 128, 64, 1e-3)
+        rep = drift_report(tr.spans(), META, HW)
+        (row,) = rep.rows
+        assert row.n == 1
+        # one row IS the fleet median: drift is exactly 1.0, so it can
+        # never become a retune candidate no matter the threshold
+        assert row.drift == pytest.approx(1.0)
+        assert rep.candidates(1.0 + 1e-9) == []
+
+    def test_threshold_boundary_is_strict(self):
+        row = DriftRecord(phase="decode", kernel="decode_attention",
+                          bucket=128, value=64, n=8, measured_s=2e-3,
+                          predicted_s=1e-3, ratio=2.0, drift=2.0)
+        rep = DriftReport(rows=(row,), median_ratio=1.0)
+        assert rep.candidates(threshold=2.0) == []        # exactly at: out
+        assert rep.candidates(threshold=1.999) == [row]   # just under: in
+        # symmetric: drift 0.5 sits exactly at threshold 2.0 too
+        low = dataclasses.replace(row, ratio=0.5, drift=0.5)
+        rep2 = DriftReport(rows=(low,), median_ratio=1.0)
+        assert rep2.candidates(threshold=2.0) == []
+        assert rep2.candidates(threshold=1.999) == [low]
+
+    def test_threshold_must_be_positive(self):
+        rep = DriftReport(rows=(), median_ratio=0.0)
+        with pytest.raises(ValueError):
+            rep.candidates(threshold=0.0)
+        with pytest.raises(ValueError):
+            rep.candidates(threshold=-1.5)
+
+    def test_zero_roofline_estimate_skips_row(self, monkeypatch):
+        from repro.tuner import dispatch
+
+        tr = Tracer()
+        _tick_span(tr, 128, 64, 1e-3)
+        spec = dispatch.KERNEL_REGISTRY["decode_attention"]
+        broken = dataclasses.replace(
+            spec, cost_model=lambda desc, hw: (lambda v: 0.0))
+        monkeypatch.setitem(dispatch.KERNEL_REGISTRY, "decode_attention",
+                            broken)
+        rep = drift_report(tr.spans(), META, HW)
+        assert rep.rows == ()                   # zero prediction: skipped
+        assert rep.candidates(1.5) == []
+
+
+# --------------------------------------------------------------------------- #
+# Engine integration: exactness + the HLO pin
+# --------------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def engine_pair():
+    """One reduced f32 model served twice — retuning off and on — with
+    identical traffic (construction + compiles dominate the cost)."""
+    import jax
+
+    from repro.models import build_model
+    from repro.serve import ServeEngine
+
+    cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                              dtype="float32")
+    params = build_model(cfg).init(jax.random.key(0))
+    prompts = [[7, 3, 99], [11, 5, 2, 42, 17, 101, 9], [250, 1],
+               [33, 44, 55, 66]]
+
+    def run(**kw):
+        eng = ServeEngine(cfg, slots=2, max_len=64, params=params,
+                          tuning_cache=TuningCache(path=None), **kw)
+        reqs = [eng.submit(p, max_new_tokens=4) for p in prompts]
+        return eng, reqs, eng.run()
+
+    return run(), run(retune="inline"), prompts
+
+
+class TestEngineIntegration:
+    def test_token_streams_exact_with_retuning_on(self, engine_pair):
+        (_, r_off, rep_off), (_, r_on, rep_on), prompts = engine_pair
+        assert rep_on.summary.n_completed == len(prompts)
+        for a, b in zip(r_off, r_on):
+            assert rep_off.outputs[a.rid] == rep_on.outputs[b.rid]
+        assert rep_on.retune is not None
+        assert rep_off.retune is None
+
+    def test_decode_hlo_byte_identical_with_controller_enabled(
+            self, engine_pair):
+        """Non-swapped buckets compile the exact same decode step with
+        the controller enabled — retuning is host-side bookkeeping
+        between ticks, never inside jitted code."""
+        import jax.numpy as jnp
+
+        (off, _, _), (on, _, _), _ = engine_pair
+        args = dict(decode_block=128,
+                    page_tables=jnp.asarray(off._tables),
+                    page_block=off._block_size, paged_decode_block=16)
+        hlo_off = off._decode.lower(off.params, dict(off._cache),
+                                    jnp.asarray(off._tokens),
+                                    **args).as_text()
+        hlo_on = on._decode.lower(off.params, dict(on._cache),
+                                  jnp.asarray(on._tokens), **args).as_text()
+        assert hlo_off == hlo_on
+
+    def test_engine_trial_on_real_ticks_adopts_or_reverts(self):
+        """Full in-engine A/B pass driven by ``propose``: the trial runs
+        on real decode ticks and concludes either way — and the plan
+        table ends at whichever value the measurement favoured."""
+        import jax
+
+        from repro.models import build_model
+        from repro.serve import ServeEngine
+
+        cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                                  dtype="float32")
+        params = build_model(cfg).init(jax.random.key(0))
+        rc = RetuneConfig(mode="inline", interval_ticks=10_000,
+                          min_samples=2, trial_ticks=2, warmup_ticks=1,
+                          cooldown_ticks=4)
+        eng = ServeEngine(cfg, slots=2, max_len=64, params=params,
+                          tuning_cache=TuningCache(path=None), retune=rc)
+        eng.submit(list(range(1, 9)), max_new_tokens=24)
+        eng.submit(list(range(3, 9)), max_new_tokens=24)
+
+        fired = {"n": 0}
+        orig = eng._decode_tick
+
+        def tick():
+            orig()
+            fired["n"] += 1
+            if fired["n"] == 4:
+                plan = eng.router.resolve(eng.router.bucket(eng.pool.kv_len))
+                cand = 1 if plan.paged_decode_block != 1 else 2
+                eng.retune.propose(eng.pool.kv_len, "paged_decode", cand)
+
+        eng._decode_tick = tick
+        rep = eng.run()
+        assert eng.retune.stats.trials == 1
+        (d,) = eng.retune.decisions
+        live = eng.router.resolve(
+            eng.router.bucket(eng.pool.kv_len)).paged_decode_block
+        assert live == (d.candidate if d.adopted else d.incumbent)
+        assert rep.router_stats["swaps"] >= 1
+        assert rep.retune["stats"]["trials"] == 1

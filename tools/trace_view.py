@@ -50,6 +50,9 @@ def main(argv=None) -> int:
                     help="exit 1 unless the trace yields per-bucket rows")
     ap.add_argument("--require-drift", action="store_true",
                     help="exit 1 unless a non-empty drift report parses")
+    ap.add_argument("--require-swaps", action="store_true",
+                    help="exit 1 unless the trace records at least one "
+                         "concluded retune A/B decision (live plan swap)")
     args = ap.parse_args(argv)
 
     tracer = load_trace(args.trace)
@@ -72,6 +75,31 @@ def main(argv=None) -> int:
         print("(no decode_tick/prefill spans with bucket attribution)")
         if args.require_buckets:
             print("trace_view: FAIL — per-bucket rows required",
+                  file=sys.stderr)
+            return 1
+
+    # -- retune sub-report: the live A/B decisions the controller logged
+    decisions = [s.attrs for s in spans if s.name == "retune_decision"]
+    n_adopted = sum(1 for d in decisions if d.get("adopted"))
+    print(f"\n# retune: {len(decisions)} decisions "
+          f"(adopted={n_adopted} rejected={len(decisions) - n_adopted}, "
+          f"trial spans={sum(1 for s in spans if s.name == 'retune_trial')})")
+    if decisions:
+        print("bucket,kernel,incumbent,candidate,incumbent_us,"
+              "candidate_us,verdict,reason")
+        for d in decisions:
+            cus = d.get("candidate_us")
+            print(f"{d.get('bucket')},{d.get('kernel')},"
+                  f"{d.get('incumbent')},{d.get('candidate')},"
+                  f"{d.get('incumbent_us', 0.0):.1f},"
+                  f"{'-' if cus is None else f'{cus:.1f}'},"
+                  f"{'ADOPTED' if d.get('adopted') else 'reverted'},"
+                  f"{d.get('reason')}")
+    else:
+        print("(no retune_decision spans — controller off, or no trial "
+              "concluded in this window)")
+        if args.require_swaps:
+            print("trace_view: FAIL — retune swap decisions required",
                   file=sys.stderr)
             return 1
 
