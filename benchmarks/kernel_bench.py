@@ -184,6 +184,62 @@ def run(print_fn=print):
                      f"block_s={int(pd_block)};page_block={gbs};"
                      f"probes={pd_info.probes};ok={ok}"))
         assert ok, ("paged_decode", label)
+
+    # int8 pool decode read: the dequant-FUSED sweep (scales ride into
+    # the kernel, fp32 KV rows never materialize) vs the
+    # dequantize-then-dense ablation (paged_dequant_gather x2 into an
+    # fp32 logical view, then the dense sweep).  At this geometry the
+    # fused read moves ~1/4 of the ablation's bytes, which is visible
+    # even to CPU wall time — asserted strictly, unlike the serve-level
+    # guard (engine steady state on a shared box is too noisy to rank).
+    from repro.kernels.paged_gather import paged_dequant_gather_ref
+
+    qb, qt, qg, qd, qbs = 4, 1024, 4, 64, 16
+    qnb = qt // qbs
+    qk = jax.random.normal(jax.random.key(9), (qb, qt, qg, qd), jnp.float32)
+    qv = jax.random.normal(jax.random.key(10), (qb, qt, qg, qd), jnp.float32)
+
+    def _quant(x):
+        blocks = np.asarray(x).reshape(qb, qnb, qbs, qg, qd)
+        sc = np.abs(blocks).max(axis=(2, 4)) / 127.0     # (B, nb, G)
+        codes = np.clip(np.rint(blocks / sc[:, :, None, :, None]),
+                        -127, 127).astype(np.int8)
+        return (jnp.asarray(codes.reshape(qb, qt, qg, qd)),
+                jnp.asarray(sc.astype(np.float32)))
+
+    qkc, qks = _quant(qk)
+    qvc, qvs = _quant(qv)
+    q8q = jax.random.normal(jax.random.key(11), (qb, qg, 1, qd), jnp.float32)
+    q8tables = jnp.asarray(
+        np.random.default_rng(1).permutation(qb * qnb).reshape(qb, qnb),
+        jnp.int32)
+    q8len = jnp.asarray([1000, 64, 1024, 511], jnp.int32)
+    q8block_s = 128
+    fused_fn = jax.jit(lambda q, kc, vc, ks, vs, t, n:
+                       paged_decode_attention_ref(
+                           q, kc, vc, t, n, page_block=qbs,
+                           block_s=q8block_s, k_scale=ks, v_scale=vs))
+
+    def _ablation(q, kc, vc, ks, vs, t, n):
+        kf = paged_dequant_gather_ref(kc, ks, t, qbs)
+        vf = paged_dequant_gather_ref(vc, vs, t, qbs)
+        return decode_attention_grouped(q, kf, vf, n)
+
+    abl_fn = jax.jit(_ablation)
+    q8args = (q8q, qkc, qvc, qks, qvs, q8tables, q8len)
+    got_fused = np.asarray(fused_fn(*q8args))
+    got_abl = np.asarray(abl_fn(*q8args))
+    ok = np.allclose(got_fused, got_abl, rtol=2e-4, atol=2e-4)
+    us_fused = min(_time(fused_fn, *q8args, reps=10) for _ in range(5))
+    us_abl = min(_time(abl_fn, *q8args, reps=10) for _ in range(5))
+    rows.append((f"paged_decode_int8[fused]", us_fused,
+                 f"block_s={q8block_s};page_block={qbs};ok={ok}"))
+    rows.append((f"paged_decode_int8[dequant_dense]", us_abl,
+                 f"block_s={q8block_s};page_block={qbs};ok={ok}"))
+    assert ok, "fused int8 sweep diverged from dequantize-then-dense"
+    assert us_fused < us_abl, \
+        (f"fused int8 read ({us_fused:.0f}us) did not beat the "
+         f"dequantize-then-dense ablation ({us_abl:.0f}us)")
     ops.set_force_mode("auto")
 
     # mapper decisions for the record

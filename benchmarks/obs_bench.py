@@ -184,11 +184,13 @@ def run(print_fn=print) -> dict:
     print_fn("name,us_per_call,derived")
 
     plain = ServeEngine(cfg, slots=SLOTS, max_len=MAX_LEN, params=params,
-                        tuning_cache=TuningCache(path=None))
+                        tuning_cache=TuningCache(path=None),
+                        prefill_chunk=None)
     tracer = Tracer()
     traced_eng = ServeEngine(cfg, slots=SLOTS, max_len=MAX_LEN,
                              params=params, tracer=tracer,
-                             tuning_cache=TuningCache(path=None))
+                             tuning_cache=TuningCache(path=None),
+                             prefill_chunk=None)
     # both engines warm first (compiles + plan refinement), then the
     # tracer is cleared: warmup ticks include XLA compile time at every
     # pool-growth boundary, and letting those spans reach the feedback

@@ -49,7 +49,16 @@ Acceptance (asserted):
     mix is token-IDENTICAL to whole-prompt prefill, keeps its chunk
     compile set on the (chunk, cache, tiles) lattice, and preserves
     decode throughput without blowing up the TTFT tail
-    (``serve_prefill_chunk[...]`` rows).
+    (``serve_prefill_chunk[...]`` rows);
+  * the int8 quantized pool (``kv_dtype="int8"``) serves the same
+    recycle-heavy mix with IDENTICAL greedy token streams and a bounded
+    per-tick logit error vs its fp32 twin (typical ticks within 5% of
+    the fp32 logit scale, worst outlier-block tick within 25%), stores
+    the KV bytes at under half (actually ~1/4) of fp32, and its fused
+    dequant read does not pathologically trail the
+    dequantize-then-dense ablation (``serve_kv_dtype[...]`` rows; the
+    strict fused-beats-materialized pin lives in kernel_bench where
+    CPU timing is stable).
 
     PYTHONPATH=src python -m benchmarks.serve_bench
 """
@@ -284,6 +293,84 @@ def _chunked_prefill_ttft(cfg, params, print_fn) -> dict:
     return out
 
 
+def _kv_dtype_matrix(cfg, params, print_fn) -> dict:
+    """The quantized pool vs its fp32 twin on identical recycle-heavy
+    traffic (same seeds, same params): per-tick logits captured from
+    the EXECUTED decode step and compared tick-for-tick.  The int8 pool
+    must stay inside a 5% (of the fp32 logit scale) error bound through
+    slot recycling, carry its KV rows in under half the bytes, and its
+    fused dequant read must not fall pathologically behind the
+    dequantize-then-dense ablation (``fused_decode=False``)."""
+    import numpy as np
+
+    out, logits, tokens = {}, {}, {}
+    for name, kvd, fused in (("fp32", "fp32", True),
+                             ("int8", "int8", True),
+                             ("int8_dequant", "int8", False)):
+        eng = ServeEngine(cfg, slots=2, max_len=MAX_LEN, params=params,
+                          kv_dtype=kvd, fused_decode=fused,
+                          tuning_cache=TuningCache(path=None))
+        drive(eng, RECYCLE_WARMUP)
+        eng.reset()
+        log = []
+        real = eng._decode
+
+        def spy(*a, __real=real, __log=log, **kw):
+            lg, cache = __real(*a, **kw)
+            __log.append(np.asarray(lg))
+            return lg, cache
+
+        eng._decode = spy
+        report = drive(eng, RECYCLE_MEASURED)
+        s = report.summary
+        assert s.n_completed == RECYCLE_MEASURED.n_requests, \
+            f"kv_dtype[{name}]: requests starved"
+        kv_bytes = sum(np.asarray(v).nbytes for k, v in eng._cache.items()
+                       if k.startswith(("k", "v")))
+        print_fn(
+            f"serve_kv_dtype[{name}],"
+            f"{s.decode_s * 1e6 / max(s.decode_steps, 1):.0f},"
+            f"tok_s={s.tokens_per_s:.1f};"
+            f"kv_kb_per_seat={kv_bytes / eng.slots / 1024:.0f};"
+            f"util={s.utilization:.2f}")
+        out[name] = {"tok_s": s.tokens_per_s, "kv_bytes": kv_bytes}
+        logits[name] = log
+        tokens[name] = [v for _, v in sorted(report.outputs.items())]
+    assert len(logits["fp32"]) == len(logits["int8"]), \
+        "fp32/int8 tick schedules diverged"
+    assert tokens["int8"] == tokens["fp32"], \
+        "int8 pool changed the greedy token streams"
+    # Per-tick max logit gap: typical ticks sit well inside 5% of the
+    # fp32 logit scale; the worst tick can spike higher when one
+    # physical block's scale is pinned by an outlier token (per-block
+    # symmetric scales make the whole block coarse), so it gets its own
+    # looser bound rather than poisoning the typical-tick pin.
+    errs = sorted(float(np.max(np.abs(a - b)))
+                  for a, b in zip(logits["fp32"], logits["int8"]))
+    scale = max(float(np.max(np.abs(a))) for a in logits["fp32"])
+    p90 = errs[int(0.9 * (len(errs) - 1))]
+    assert p90 <= 0.05 * scale, \
+        f"int8 typical logit error {p90:.4f} exceeds 5% of {scale:.2f}"
+    assert errs[-1] <= 0.25 * scale, \
+        f"int8 worst-tick logit error {errs[-1]:.4f} exceeds 25% of " \
+        f"{scale:.2f}"
+    err = errs[-1]
+    assert out["int8"]["kv_bytes"] <= 0.5 * out["fp32"]["kv_bytes"], \
+        "int8 pool failed to halve the KV bytes"
+    # Interpret-mode CPU timing inverts the fused read's real win (the
+    # blocked sweep pays python-level grid overhead that the vectorized
+    # materializing gather does not, and neither pays HBM): observed
+    # fused/ablation tok/s hovers ~0.55 here while the jitted
+    # kernel-level comparison in kernel_bench has fused ~1.9x FASTER —
+    # that is where the strict assert lives.  This bound only catches
+    # pathology (recompile-per-tick cliffs), so it sits below the noise.
+    assert out["int8"]["tok_s"] >= 0.4 * out["int8_dequant"]["tok_s"], \
+        "fused int8 read fell pathologically below the dequant ablation"
+    out["logit_err"] = err
+    out["logit_scale"] = scale
+    return out
+
+
 def _steady_state(name, cfg, params, spec, admission, print_fn):
     # paged=False: the bucketing ablation isolates the LATTICE variable
     # (naive's mode="exact" has no finite lattice and cannot page at
@@ -349,6 +436,7 @@ def run(print_fn=print) -> dict:
     decode_read = _gather_vs_fused(cfg, params, print_fn)
     prefill = _prefill_tile_ttft(cfg, params, print_fn)
     chunked = _chunked_prefill_ttft(cfg, params, print_fn)
+    kv_dtype = _kv_dtype_matrix(cfg, params, print_fn)
 
     families = _family_matrix(print_fn)
     assert set(families) == {f for f, _ in FAMILY_MATRIX}
@@ -364,6 +452,7 @@ def run(print_fn=print) -> dict:
         "decode_read_tok_s": decode_read,
         "prefill_ttft_p50_s": prefill,
         "chunked_prefill": chunked,
+        "kv_dtype": kv_dtype,
         "family_tok_s": families,
     }
 

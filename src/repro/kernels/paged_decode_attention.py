@@ -90,11 +90,19 @@ def paged_decode_attention_ref(
     block_s: int,
     window=None,                  # int | traced scalar | None
     scale=None,
+    k_scale=None,                 # (B, T/pb, G) f32 — int8 pool only
+    v_scale=None,
 ) -> jax.Array:
     """Blocked fused reference: sweeps the LOGICAL sequence in
     ``block_s`` windows, each window gathering only its own physical
     pages through the table — the fused kernel's schedule without
     Pallas, and the numerics oracle for it.
+
+    With ``k_scale``/``v_scale`` the caches hold int8 codes on the same
+    physical grid and dequant happens per window: each window gathers
+    its pages' (block, head) scales by the SAME flat block index the
+    codes use (``flat_token // page_block``), so no dequantized cache is
+    ever materialized — the schedule the fused int8 kernel executes.
 
     Example::
 
@@ -115,8 +123,18 @@ def paged_decode_attention_ref(
         idx = jnp.pad(idx, ((0, 0), (0, tp - t)))
     n = tp // block_s
     idx = jnp.moveaxis(idx.reshape(b, n, block_s), 1, 0)         # (n, B, bs)
-    kf = k_cache.astype(jnp.float32).reshape((b * t,) + k_cache.shape[2:])
-    vf = v_cache.astype(jnp.float32).reshape((b * t,) + v_cache.shape[2:])
+    quant = k_scale is not None
+    if quant:
+        assert t % page_block == 0, (t, page_block)
+        kf = k_cache.reshape((b * t,) + k_cache.shape[2:])
+        vf = v_cache.reshape((b * t,) + v_cache.shape[2:])
+        ksf = k_scale.reshape(b * nb, g)
+        vsf = v_scale.reshape(b * nb, g)
+    else:
+        kf = k_cache.astype(jnp.float32).reshape((b * t,)
+                                                 + k_cache.shape[2:])
+        vf = v_cache.astype(jnp.float32).reshape((b * t,)
+                                                 + v_cache.shape[2:])
     qf = q.astype(jnp.float32) * scale
     clen = jnp.asarray(cache_len)
     clen = clen[:, None] if clen.ndim else clen[None, None]      # (B|1, 1)
@@ -126,6 +144,14 @@ def paged_decode_attention_ref(
         ix, ci = xs                                              # (B, bs)
         kb = jnp.take(kf, ix.reshape(-1), axis=0).reshape(b, block_s, g, d)
         vb = jnp.take(vf, ix.reshape(-1), axis=0).reshape(b, block_s, g, d)
+        if quant:
+            # flat_token // pb == flat block index: codes and scales
+            # resolve through one layout invariant
+            bix = (ix // page_block).reshape(-1)
+            sk = jnp.take(ksf, bix, axis=0).reshape(b, block_s, g)
+            sv = jnp.take(vsf, bix, axis=0).reshape(b, block_s, g)
+            kb = kb.astype(jnp.float32) * sk[..., None]
+            vb = vb.astype(jnp.float32) * sv[..., None]
         s = jnp.einsum("bgrd,bcgd->bgrc", qf, kb)
         pos = ci * block_s + jnp.arange(block_s)[None, :]        # (1, bs)
         ok = pos < clen
@@ -154,10 +180,11 @@ def paged_decode_attention_ref(
 # --------------------------------------------------------------------------- #
 
 
-def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *,
-                         page_block: int, ppb: int, scale: float):
-    del tbl_ref            # consumed by the index_map, not the body
+def _sweep_page(len_ref, q_ref, k, v, o_ref, m_ref, l_ref, acc_ref, *,
+                page_block: int, ppb: int, scale: float):
+    """One physical page's online-softmax update — the shared body of
+    the fp32 and int8 kernels (which differ only in how ``k``/``v`` were
+    produced from their refs)."""
     si = pl.program_id(1)
     pi = pl.program_id(2)
 
@@ -168,7 +195,6 @@ def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0].astype(jnp.float32) * scale            # (G, R, D)
-    k = k_ref[0].astype(jnp.float32)                    # (pb, G, D)
     s = jnp.einsum("grd,cgd->grc", q, k,
                    preferred_element_type=jnp.float32)  # (G, R, pb)
     pos = (si * ppb + pi) * page_block \
@@ -183,13 +209,36 @@ def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     m_ref[...] = m_new
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
     acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum(
-        "grc,cgd->grd", p, v_ref[0].astype(jnp.float32),
+        "grc,cgd->grd", p, v,
         preferred_element_type=jnp.float32)
 
     @pl.when((si == pl.num_programs(1) - 1) & (pi == pl.num_programs(2) - 1))
     def _flush():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *,
+                         page_block: int, ppb: int, scale: float):
+    del tbl_ref            # consumed by the index_map, not the body
+    _sweep_page(len_ref, q_ref, k_ref[0].astype(jnp.float32),
+                v_ref[0].astype(jnp.float32), o_ref, m_ref, l_ref,
+                acc_ref, page_block=page_block, ppb=ppb, scale=scale)
+
+
+def _paged_decode_kernel_int8(tbl_ref, len_ref, q_ref, k_ref, v_ref,
+                              ks_ref, vs_ref, o_ref,
+                              m_ref, l_ref, acc_ref, *,
+                              page_block: int, ppb: int, scale: float):
+    # the (1, G) scale rows rode the SAME scalar-prefetched flat-block
+    # index as the int8 pages; dequant is in-register, per page — the
+    # f32 view never exists outside this grid step
+    del tbl_ref
+    k = k_ref[0].astype(jnp.float32) * ks_ref[0][None, :, None]
+    v = v_ref[0].astype(jnp.float32) * vs_ref[0][None, :, None]
+    _sweep_page(len_ref, q_ref, k, v, o_ref, m_ref, l_ref, acc_ref,
+                page_block=page_block, ppb=ppb, scale=scale)
 
 
 def paged_decode_attention_pallas(
@@ -202,12 +251,17 @@ def paged_decode_attention_pallas(
     page_block: int,
     block_s: int,
     scale=None,
+    k_scale=None,                 # (B, T/pb, G) f32 — int8 pool only
+    v_scale=None,
     interpret: bool = False,
 ) -> jax.Array:
     """The fused kernel: grid (B, T/block_s, block_s/page_block), the
     scalar-prefetched flat-block table routing ONE physical page per
     innermost grid step straight into the online softmax — decode reads
-    paged KV with zero intermediate materialization.
+    paged KV with zero intermediate materialization.  With
+    ``k_scale``/``v_scale`` the caches hold int8 codes; the scales are
+    two extra (1, G) BlockSpec inputs riding the SAME prefetched table
+    entry as their page, dequantized in-register inside the sweep.
 
     Example::
 
@@ -234,24 +288,35 @@ def paged_decode_attention_pallas(
     blocks_k = k_cache.reshape(b * nb, pb, g, d)
     blocks_v = v_cache.reshape(b * nb, pb, g, d)
     clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    quant = k_scale is not None
+
+    page_spec = pl.BlockSpec((1, pb, g, d),
+                             lambda bi, si, pi, tbl:
+                             (tbl[bi, si * ppb + pi], 0, 0, 0))
+    scale_spec = pl.BlockSpec((1, g),
+                              lambda bi, si, pi, tbl:
+                              (tbl[bi, si * ppb + pi], 0))
+    in_specs = [
+        pl.BlockSpec((1,), lambda bi, si, pi, tbl: (bi,)),
+        pl.BlockSpec((1, g, r, d),
+                     lambda bi, si, pi, tbl: (bi, 0, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [clen, q, blocks_k, blocks_v]
+    kernel = _paged_decode_kernel
+    if quant:
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale.reshape(b * nb, g),
+                     v_scale.reshape(b * nb, g)]
+        kernel = _paged_decode_kernel_int8
 
     out = pl.pallas_call(
-        functools.partial(_paged_decode_kernel, page_block=pb, ppb=ppb,
-                          scale=scale),
+        functools.partial(kernel, page_block=pb, ppb=ppb, scale=scale),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(b, nsteps, ppb),
-            in_specs=[
-                pl.BlockSpec((1,), lambda bi, si, pi, tbl: (bi,)),
-                pl.BlockSpec((1, g, r, d),
-                             lambda bi, si, pi, tbl: (bi, 0, 0, 0)),
-                pl.BlockSpec((1, pb, g, d),
-                             lambda bi, si, pi, tbl:
-                             (tbl[bi, si * ppb + pi], 0, 0, 0)),
-                pl.BlockSpec((1, pb, g, d),
-                             lambda bi, si, pi, tbl:
-                             (tbl[bi, si * ppb + pi], 0, 0, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, g, r, d),
                                    lambda bi, si, pi, tbl: (bi, 0, 0, 0)),
             scratch_shapes=[
@@ -262,7 +327,7 @@ def paged_decode_attention_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct((b, g, r, d), q.dtype),
         interpret=interpret,
-    )(flat_block, clen, q, blocks_k, blocks_v)
+    )(flat_block, *operands)
     return out
 
 
@@ -277,13 +342,16 @@ def paged_decode_attention(
     block_s: int,
     window=None,
     scale=None,
+    k_scale=None,
+    v_scale=None,
     use_pallas: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """Dispatch the fused paged sweep: the Pallas kernel when requested
     and legal (whole-page cache, page-multiple ``block_s``, no sliding
     window — the kernel masks only cache length), the blocked reference
-    with the same schedule otherwise.
+    with the same schedule otherwise.  ``k_scale``/``v_scale`` select
+    the int8 dequant-fused variants on both paths.
 
     Example::
 
@@ -297,7 +365,9 @@ def paged_decode_attention(
         clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
         return paged_decode_attention_pallas(
             q, k_cache, v_cache, tables, clen, page_block=page_block,
-            block_s=block_s, scale=scale, interpret=interpret)
+            block_s=block_s, scale=scale, k_scale=k_scale,
+            v_scale=v_scale, interpret=interpret)
     return paged_decode_attention_ref(
         q, k_cache, v_cache, tables, cache_len, page_block=page_block,
-        block_s=block_s, window=window, scale=scale)
+        block_s=block_s, window=window, scale=scale, k_scale=k_scale,
+        v_scale=v_scale)

@@ -30,7 +30,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["flat_position", "paged_flat_indices", "paged_gather",
-           "paged_gather_pallas", "paged_gather_ref"]
+           "paged_gather_pallas", "paged_gather_ref",
+           "paged_dequant_gather", "paged_dequant_gather_pallas",
+           "paged_dequant_gather_ref"]
 
 
 def flat_position(pid, pos, slots: int, kv_len: int, block_size: int):
@@ -131,3 +133,96 @@ def paged_gather(cache: jax.Array, tables: jax.Array, block_size: int, *,
         return paged_gather_pallas(cache, tables, block_size,
                                    interpret=interpret)
     return paged_gather_ref(cache, tables, block_size)
+
+
+# --------------------------------------------------------------------------- #
+# int8 variant: dequant fused into the gather (scales ride the table)
+# --------------------------------------------------------------------------- #
+
+
+def paged_dequant_gather_ref(cache: jax.Array, scale: jax.Array,
+                             tables: jax.Array, block_size: int,
+                             out_dtype=jnp.float32) -> jax.Array:
+    """Reference fused dequant-gather for the int8 pool.
+
+    ``cache`` (B, T, G, D) int8 codes on the physical grid; ``scale``
+    (B, T/bs, G) f32 per-(physical block, kv head) symmetric scales,
+    indexed by physical coordinates ``[pid % B, pid // B]``.  Returns
+    the request-logical dequantized view ``codes * scale`` in
+    ``out_dtype`` — the same one-take schedule as ``paged_gather_ref``,
+    with the scale gathered by the *same* flat block index
+    (``flat_token // bs == (pid % B) * nb + pid // B``: the layout
+    invariant keeps codes and scales pointing at one physical block).
+    """
+    b, t = cache.shape[:2]
+    nb = -(-t // block_size)
+    pid = jnp.maximum(tables[:, :nb], 0).astype(jnp.int32)
+    flat_block = (pid % b) * nb + (pid // b)              # (B, nb)
+    codes = paged_gather_ref(cache, tables, block_size)
+    sc = jnp.take(scale.reshape(b * nb, -1), flat_block.reshape(-1),
+                  axis=0).reshape(b, nb, scale.shape[-1])
+    sc = jnp.repeat(sc, block_size, axis=1)[:, :t]        # (B, T, G)
+    return codes.astype(out_dtype) * sc[..., None].astype(out_dtype)
+
+
+def _dequant_gather_kernel(table_ref, c_ref, s_ref, o_ref):
+    # the index_map routed this grid step's physical block AND its scale
+    # row here; dequant happens in-register, the int8 codes never
+    # materialize at f32 width outside this block
+    del table_ref
+    o_ref[...] = (c_ref[...].astype(o_ref.dtype)
+                  * s_ref[...][:, None, :, None].astype(o_ref.dtype))
+
+
+def paged_dequant_gather_pallas(cache: jax.Array, scale: jax.Array,
+                                tables: jax.Array, block_size: int, *,
+                                out_dtype=jnp.float32,
+                                interpret: bool = False) -> jax.Array:
+    """Pallas fused dequant-gather: grid step (b, i) DMAs physical int8
+    block ``tables[b, i]`` and its (1, G) scale row — both BlockSpecs
+    read the same scalar-prefetched flat block index — and writes the
+    dequantized logical block."""
+    b, t = cache.shape[:2]
+    bs = block_size
+    nb = t // bs
+    assert t % bs == 0, (t, bs)
+    g = cache.shape[2]
+    pid = jnp.maximum(tables[:, :nb], 0).astype(jnp.int32)
+    flat_block = (pid % b) * nb + (pid // b)              # (B, nb)
+    blocks = cache.reshape((b * nb, bs) + cache.shape[2:])
+    scale_flat = scale.reshape(b * nb, g)
+    tail = cache.shape[2:]
+    ones = (0,) * len(tail)
+
+    out = pl.pallas_call(
+        _dequant_gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, nb),
+            in_specs=[
+                pl.BlockSpec((1, bs) + tail,
+                             lambda bi, i, tbl: (tbl[bi, i], 0) + ones),
+                pl.BlockSpec((1, g),
+                             lambda bi, i, tbl: (tbl[bi, i], 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, bs) + tail,
+                lambda bi, i, tbl: (bi * nb + i, 0) + ones),
+        ),
+        out_shape=jax.ShapeDtypeStruct(blocks.shape, out_dtype),
+        interpret=interpret,
+    )(flat_block, blocks, scale_flat)
+    return out.reshape(cache.shape[:2] + tail)
+
+
+def paged_dequant_gather(cache: jax.Array, scale: jax.Array,
+                         tables: jax.Array, block_size: int, *,
+                         out_dtype=jnp.float32, use_pallas: bool = False,
+                         interpret: bool = False) -> jax.Array:
+    """Dispatch the fused dequant-gather (int8 pool read half)."""
+    if use_pallas and cache.shape[1] % block_size == 0:
+        return paged_dequant_gather_pallas(cache, scale, tables,
+                                           block_size, out_dtype=out_dtype,
+                                           interpret=interpret)
+    return paged_dequant_gather_ref(cache, scale, tables, block_size,
+                                    out_dtype=out_dtype)

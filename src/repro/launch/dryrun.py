@@ -119,7 +119,7 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
         decode = make_decode_step(model, plan, flags=overrides)
         params = model.abstract_params()
         p_sh = shd.param_shardings(model.specs, plan)
-        cdt = "int8" if plan.cache_dtype == "int8" else None
+        cdt = plan.kv_spec.dtype
         cache_abs = model.init_cache(shape.global_batch, shape.seq_len,
                                      abstract=True, expand_kv=plan.expand_kv,
                                      cache_dtype=cdt)

@@ -116,11 +116,19 @@ def main():
                          "candidate is never adopted.  'inline' re-resolves "
                          "between ticks (deterministic); 'background' moves "
                          "the re-resolve to a worker thread")
-    ap.add_argument("--prefill-chunk", metavar="N|auto", default=None,
+    ap.add_argument("--prefill-chunk", metavar="N|auto|none",
+                    default="auto",
                     help="prefill prompts in N-token chunks interleaved "
                          "with decode ticks instead of all at once — long "
-                         "prompts stop stalling the pool.  'auto' uses the "
-                         "bucket's tuned flash tile (block_q) as the chunk")
+                         "prompts stop stalling the pool.  'auto' (the "
+                         "default) uses the bucket's tuned flash tile "
+                         "(block_q) as the chunk; 'none' opts out to "
+                         "whole-prompt prefill")
+    ap.add_argument("--kv-dtype", choices=("fp32", "int8"), default="fp32",
+                    help="KV pool storage dtype: int8 stores symmetric "
+                         "per-(block, head) codes + scales (~1/4 of the "
+                         "fp32 pool bytes) with dequantization fused into "
+                         "the tuned decode sweep; requires the paged pool")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--trace", metavar="PATH", default=None,
@@ -150,7 +158,9 @@ def main():
         from repro.obs import Tracer
         tracer = Tracer()
     chunk = args.prefill_chunk
-    if chunk is not None and chunk != "auto":
+    if chunk == "none":
+        chunk = None
+    elif chunk is not None and chunk != "auto":
         chunk = int(chunk)
     engine = ServeEngine(
         args.arch, slots=args.slots, max_len=args.max_len,
@@ -158,6 +168,7 @@ def main():
         spec=BucketSpec(max_len=args.max_len, mode=args.bucket_mode),
         policy=args.policy, measure=args.measure, tracer=tracer,
         retune=args.retune, prefill_chunk=chunk,
+        kv_dtype=args.kv_dtype,
         verbose=True)
     report = drive(engine, traffic)
     s = report.summary

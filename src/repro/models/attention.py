@@ -689,6 +689,56 @@ def _cache_read(cache, compute_dtype):
     return cache
 
 
+def _paged_quant_write(cache, scale, new, pos, *, page_tables, page_block):
+    """Write one (B, G, D) KV row into the int8 paged pool, maintaining
+    the per-(physical block, kv head) symmetric scales.
+
+    Requantize-on-scale-growth: the block's scale only ever grows
+    (``new_scale = max(old, amax(|token|)/127)``), and when it grows the
+    block's existing codes are rescaled by ``old/new_scale`` in the same
+    scatter.  ``scale == 0`` is the DEAD sentinel — ``write_row`` zeroes
+    every leased block's scale beyond the prompt, so the first decode
+    write into a fresh (or recycled) block sees ``old == 0``, rescales
+    the stale tenant's codes by 0, and sets the scale from its own amax:
+    a recycled block can never leak codes *or* scales across tenants.
+    Rows whose table entry is unmapped or whose position overruns drop
+    both scatters, matching ``_cache_write``'s retired-row contract."""
+    b, t = cache.shape[:2]
+    bs = int(page_block)
+    nb_t = t // bs
+    nb = page_tables.shape[1]
+    new = new[:, 0] if new.ndim == cache.ndim else new       # (B, G, D)
+    pos = jnp.asarray(pos)
+    pos = jnp.broadcast_to(pos, (b,)) if pos.ndim == 0 else pos
+    bi = jnp.clip(pos // bs, 0, nb - 1)
+    pid = page_tables[jnp.arange(b), bi]                     # (B,)
+    valid = (pid >= 0) & (pos // bs < nb) & (pos < t)
+    pidc = jnp.maximum(pid, 0)
+    row, off = pidc % b, pidc // b                           # physical grid
+    old = scale[row, off]                                    # (B, G)
+    amax = jnp.max(jnp.abs(new.astype(jnp.float32)), axis=-1)
+    new_scale = jnp.maximum(old, amax / 127.0)
+    safe = jnp.where(new_scale > 0, new_scale, 1.0)
+    ratio = jnp.where(new_scale > 0, old / safe, 0.0)        # 0 wipes stale
+    flat_cache = cache.reshape((b * t,) + cache.shape[2:])
+    idx = (row * t + off * bs)[:, None] + jnp.arange(bs)[None, :]
+    codes = jnp.take(flat_cache, idx.reshape(-1), axis=0) \
+        .reshape((b, bs) + cache.shape[2:])                  # (B, bs, G, D)
+    codes = jnp.round(codes.astype(jnp.float32) * ratio[:, None, :, None])
+    tok = jnp.round(new.astype(jnp.float32) / safe[..., None])
+    hot = jnp.arange(bs)[None, :] == (pos % bs)[:, None]     # (B, bs)
+    codes = jnp.where(hot[..., None, None], tok[:, None], codes)
+    codes = jnp.clip(codes, -127, 127).astype(cache.dtype)
+    idx = jnp.where(valid[:, None], idx, b * t)   # OOB scatter index: drop
+    flat_cache = flat_cache.at[idx.reshape(-1)].set(
+        codes.reshape((-1,) + cache.shape[2:]), mode="drop")
+    sflat = scale.reshape((b * nb_t,) + scale.shape[2:])
+    sidx = jnp.where(valid, row * nb_t + off, b * nb_t)
+    sflat = sflat.at[sidx].set(new_scale.astype(scale.dtype), mode="drop")
+    return (flat_cache.reshape(cache.shape),
+            sflat.reshape(scale.shape))
+
+
 def attention_decode(
     params: dict,
     x: jax.Array,                 # (B, 1, D)
@@ -704,9 +754,20 @@ def attention_decode(
     page_tables=None,             # (B, nb) int32 | None — physical paging
     page_block: Optional[int] = None,
     paged_decode_block: Optional[int] = None,
+    k_scale=None,                 # (B, T/pb, G) f32 | None — int8 pool
+    v_scale=None,
     ctx: ShardCtx,
-) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
     """One-token decode; returns (out (B,1,D), updated caches).
+
+    ``k_scale``/``v_scale`` mark the QUANTIZED paged pool: the caches
+    hold int8 codes, writes go through the requantize-on-scale-growth
+    scatter (``_paged_quant_write``), reads dequantize INSIDE the fused
+    sweep (or the gather kernel on the ablation path) — no f32 cache is
+    ever materialized — and the return carries the updated scales:
+    ``(out, (k_cache, v_cache, k_scale, v_scale))``.  When they are
+    ``None`` (the default) this function traces the exact pre-quantized
+    graph, keeping the fp32 serving path byte-identical.
 
     A vector ``pos`` (B,) drives the ragged serving pool: every row
     writes its new KV at its own position and masks its own cache
@@ -730,6 +791,13 @@ def attention_decode(
     instead of copying cache rows."""
     b = x.shape[0]
     q, k, v = _project_qkv(params, x, cfg, cos, sin, ctx)
+    if k_scale is not None:
+        return _attention_decode_quantized(
+            params, q, k, v, cfg, k_cache, v_cache, k_scale, v_scale,
+            pos, window=window, decode_block=decode_block,
+            page_tables=page_tables, page_block=page_block,
+            paged_decode_block=paged_decode_block,
+            compute_dtype=x.dtype)
     # write the new kv at position `pos` (quantizing if the cache is int8)
     k_cache = _cache_write(k_cache, k, pos, page_tables=page_tables,
                            page_block=page_block)
@@ -779,6 +847,62 @@ def attention_decode(
     out = jnp.einsum("bhk,hkd->bd", o.reshape(b, -1, cfg.head_dim),
                      params["wo"])
     return out[:, None, :], (k_cache, v_cache)
+
+
+def _attention_decode_quantized(
+    params, q, k, v, cfg, k_cache, v_cache, k_scale, v_scale, pos, *,
+    window, decode_block, page_tables, page_block, paged_decode_block,
+    compute_dtype,
+):
+    """The int8 paged-pool decode: quantizing scatter writes, then a
+    read that dequantizes inside the executed kernel — the fused
+    table-consuming sweep when ``paged_decode_block`` is tuned, the
+    dequant-fused gather + dense sweep on the ablation path."""
+    assert page_tables is not None, "kv scales require the paged pool"
+    b = q.shape[0]
+    k_cache, k_scale = _paged_quant_write(k_cache, k_scale, k, pos,
+                                          page_tables=page_tables,
+                                          page_block=page_block)
+    v_cache, v_scale = _paged_quant_write(v_cache, v_scale, v, pos,
+                                          page_tables=page_tables,
+                                          page_block=page_block)
+    use_pallas, interpret = _pallas_mode()
+    if paged_decode_block is not None:
+        from repro.kernels.paged_decode_attention import \
+            paged_decode_attention
+
+        clen = jnp.broadcast_to(jnp.asarray(pos + 1, jnp.int32), (b,))
+        o = paged_decode_attention(
+            q[:, 0], k_cache, v_cache, page_tables, clen,
+            page_block=int(page_block), block_s=int(paged_decode_block),
+            window=window, k_scale=k_scale, v_scale=v_scale,
+            use_pallas=use_pallas, interpret=interpret)
+    else:
+        from repro.kernels.paged_gather import paged_dequant_gather
+
+        kr = paged_dequant_gather(k_cache, k_scale, page_tables,
+                                  int(page_block), out_dtype=compute_dtype,
+                                  use_pallas=use_pallas,
+                                  interpret=interpret)
+        vr = paged_dequant_gather(v_cache, v_scale, page_tables,
+                                  int(page_block), out_dtype=compute_dtype,
+                                  use_pallas=use_pallas,
+                                  interpret=interpret)
+        clen = pos + 1
+        if decode_block is None:
+            o = decode_attention_grouped(q[:, 0], kr, vr, clen,
+                                         window=window)
+        elif use_pallas and window is None:
+            clen_v = jnp.broadcast_to(jnp.asarray(clen, jnp.int32), (b,))
+            o = pallas_decode_attention(q[:, 0], kr, vr, clen_v,
+                                        block=decode_block,
+                                        interpret=interpret)
+        else:
+            o = blocked_decode_attention(q[:, 0], kr, vr, clen,
+                                         block=decode_block, window=window)
+    out = jnp.einsum("bhk,hkd->bd", o.reshape(b, -1, cfg.head_dim),
+                     params["wo"])
+    return out[:, None, :], (k_cache, v_cache, k_scale, v_scale)
 
 
 def _pallas_mode() -> tuple[bool, bool]:

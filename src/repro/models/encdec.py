@@ -140,14 +140,17 @@ def encdec_forward(params: dict, tokens: jax.Array, frames: jax.Array,
 
 
 def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
-                      abstract: bool = False) -> dict:
+                      abstract: bool = False, cache_dtype=None) -> dict:
     g = max(cfg.num_kv_heads, 1)
     l, t = cfg.num_layers, cfg.encoder_tokens
+    # cache_dtype quantizes only the growing self-attention k/v (the
+    # paged pool); the static cross-attention ck/cv stay model dtype
+    kv_dt = jnp.dtype(cache_dtype) if cache_dtype is not None else dtype
     mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract else \
          (lambda s, dt: jnp.zeros(s, dt))
     return {
-        "k": mk((l, batch, max_len, g, cfg.head_dim), dtype),
-        "v": mk((l, batch, max_len, g, cfg.head_dim), dtype),
+        "k": mk((l, batch, max_len, g, cfg.head_dim), kv_dt),
+        "v": mk((l, batch, max_len, g, cfg.head_dim), kv_dt),
         "ck": mk((l, batch, t, g, cfg.head_dim), dtype),
         "cv": mk((l, batch, t, g, cfg.head_dim), dtype),
         "pos": mk((), jnp.int32),
@@ -170,27 +173,37 @@ def encdec_decode(params: dict, cache: dict, tokens: jax.Array,
     rope_pos = pos[:, None] if pos.ndim else pos[None]
     cos, sin = rope_tables(rope_pos, cfg.head_dim, cfg.rope_theta)
 
+    quant = "k_scale" in cache   # int8 paged pool: scales ride the scan
+
     def body(x, xs):
-        lp, kc, vc, ck, cv = opt_barrier(xs)
+        if quant:
+            lp, kc, vc, ks, vs, ck, cv = opt_barrier(xs)
+        else:
+            lp, kc, vc, ck, cv = opt_barrier(xs)
+            ks = vs = None
         h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
-        a, (kc, vc) = attention_decode(lp["attn"], h, cfg, kc, vc, pos,
-                                       cos=cos, sin=sin,
-                                       decode_block=decode_block,
-                                       page_tables=page_tables,
-                                       page_block=page_block,
-                                       paged_decode_block=paged_decode_block,
-                                       ctx=ctx)
+        a, kv = attention_decode(lp["attn"], h, cfg, kc, vc, pos,
+                                 cos=cos, sin=sin,
+                                 decode_block=decode_block,
+                                 page_tables=page_tables,
+                                 page_block=page_block,
+                                 paged_decode_block=paged_decode_block,
+                                 k_scale=ks, v_scale=vs, ctx=ctx)
         x = x + a
         h = rmsnorm(x, lp["ln_x"], cfg.norm_eps)
         x = x + _cross_attn(lp["cross"], h, ck, cv, cfg, ctx)
         h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
         x = x + mlp(lp["mlp"], h, cfg.mlp_act, ctx)
-        return x, (kc, vc)
+        return x, kv
 
-    x, (kc, vc) = jax.lax.scan(
-        body, x, (params["dec_blocks"], cache["k"], cache["v"],
-                  cache["ck"], cache["cv"]))
+    xs = (params["dec_blocks"], cache["k"], cache["v"])
+    if quant:
+        xs = xs + (cache["k_scale"], cache["v_scale"])
+    x, kv_new = jax.lax.scan(body, x, xs + (cache["ck"], cache["cv"]))
     x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
     logits = unembed(params["embed"], x, ctx)
-    return logits, {"k": kc, "v": vc, "ck": cache["ck"], "cv": cache["cv"],
-                    "pos": pos + 1}
+    out = {"k": kv_new[0], "v": kv_new[1], "ck": cache["ck"],
+           "cv": cache["cv"], "pos": pos + 1}
+    if quant:
+        out["k_scale"], out["v_scale"] = kv_new[2], kv_new[3]
+    return logits, out

@@ -114,16 +114,19 @@ def hybrid_forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
 
 
 def hybrid_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
-                      abstract: bool = False) -> dict:
+                      abstract: bool = False, cache_dtype=None) -> dict:
     ng = n_groups(cfg)
     lp = padded_layers(cfg)
     g = max(cfg.num_kv_heads, 1)
     shapes = ssm_cache_shape(cfg, batch)
+    # cache_dtype quantizes only the attention k/v (the paged pool);
+    # the ssm state/conv stay at their recurrence dtypes
+    kv_dt = jnp.dtype(cache_dtype) if cache_dtype is not None else dtype
     mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract else \
          (lambda s, dt: jnp.zeros(s, dt))
     return {
-        "k": mk((ng, batch, max_len, g, cfg.head_dim), dtype),
-        "v": mk((ng, batch, max_len, g, cfg.head_dim), dtype),
+        "k": mk((ng, batch, max_len, g, cfg.head_dim), kv_dt),
+        "v": mk((ng, batch, max_len, g, cfg.head_dim), kv_dt),
         "state": mk((lp,) + shapes["state"], jnp.float32),
         "conv": mk((lp,) + shapes["conv"], dtype),
         "pos": mk((), jnp.int32),
@@ -151,16 +154,22 @@ def hybrid_decode(params: dict, cache: dict, tokens: jax.Array,
     gstate = _group(cache["state"], ng, k)
     gconv = _group(cache["conv"], ng, k)
 
+    quant = "k_scale" in cache   # int8 paged pool: scales ride the scan
+
     def group_body(x, xs):
-        gp, gf, kc, vc, st, cv = opt_barrier(xs)
+        if quant:
+            gp, gf, kc, vc, ks, vs, st, cv = opt_barrier(xs)
+        else:
+            gp, gf, kc, vc, st, cv = opt_barrier(xs)
+            ks = vs = None
         h = rmsnorm(x, params["shared"]["ln1"], cfg.norm_eps)
-        a, (kc, vc) = attention_decode(params["shared"]["attn"], h, cfg,
-                                       kc, vc, pos, cos=cos, sin=sin,
-                                       decode_block=decode_block,
-                                       page_tables=page_tables,
-                                       page_block=page_block,
-                                       paged_decode_block=paged_decode_block,
-                                       ctx=ctx)
+        a, kv = attention_decode(params["shared"]["attn"], h, cfg,
+                                 kc, vc, pos, cos=cos, sin=sin,
+                                 decode_block=decode_block,
+                                 page_tables=page_tables,
+                                 page_block=page_block,
+                                 paged_decode_block=paged_decode_block,
+                                 k_scale=ks, v_scale=vs, ctx=ctx)
         x = x + a
         h = rmsnorm(x, params["shared"]["ln2"], cfg.norm_eps)
         x = x + mlp(params["shared"]["mlp"], h, cfg.mlp_act, ctx)
@@ -173,17 +182,22 @@ def hybrid_decode(params: dict, cache: dict, tokens: jax.Array,
             return x, (st_n, cv_n)
 
         x, (st, cv) = jax.lax.scan(layer_body, x, (gp, gf, st, cv))
-        return x, (kc, vc, st, cv)
+        return x, kv + (st, cv)
 
-    x, (kc, vc, st, cv) = jax.lax.scan(
-        group_body, x, (gblocks, flags, cache["k"], cache["v"], gstate, gconv))
+    xs = (gblocks, flags, cache["k"], cache["v"])
+    if quant:
+        xs = xs + (cache["k_scale"], cache["v_scale"])
+    x, out = jax.lax.scan(group_body, x, xs + (gstate, gconv))
+    st, cv = out[-2], out[-1]
     x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
     logits = unembed(params["embed"], x, ctx)
     lp = padded_layers(cfg)
     new_cache = {
-        "k": kc, "v": vc,
+        "k": out[0], "v": out[1],
         "state": st.reshape((lp,) + st.shape[2:]),
         "conv": cv.reshape((lp,) + cv.shape[2:]),
         "pos": pos + 1,
     }
+    if quant:
+        new_cache["k_scale"], new_cache["v_scale"] = out[2], out[3]
     return logits, new_cache

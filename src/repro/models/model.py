@@ -147,10 +147,12 @@ class Model:
                                           abstract=abstract)
         if f == "hybrid":
             return hybrid_mod.hybrid_init_cache(cfg, batch, max_len,
-                                                self.dtype, abstract=abstract)
+                                                self.dtype, abstract=abstract,
+                                                cache_dtype=cache_dtype)
         if f == "encdec":
             return encdec_mod.encdec_init_cache(cfg, batch, max_len,
-                                                self.dtype, abstract=abstract)
+                                                self.dtype, abstract=abstract,
+                                                cache_dtype=cache_dtype)
         raise ValueError(f)
 
     def prefill(self, params, batch: dict, max_len: int, *,

@@ -376,25 +376,39 @@ def decode_step(
     cos_l, sin_l = rope_tables(rope_pos, cfg.head_dim, LOCAL_ROPE_THETA)
     flags = layer_flags(cfg)
 
+    # the quantized paged pool threads per-(block, head) scales through
+    # the layer scan; the branch is PYTHON-level (a dict-key check), so
+    # the unquantized trace stays byte-identical to the pre-int8 graph
+    quant = "k_scale" in cache
+
     def body(x, xs):
-        layer_params, is_global, k_c, v_c = opt_barrier(xs)
+        if quant:
+            layer_params, is_global, k_c, v_c, ks, vs = opt_barrier(xs)
+        else:
+            layer_params, is_global, k_c, v_c = opt_barrier(xs)
+            ks = vs = None
         cos = jnp.where(is_global, cos_g, cos_l) if cfg.local_global_ratio else cos_g
         sin = jnp.where(is_global, sin_g, sin_l) if cfg.local_global_ratio else sin_g
         h = rmsnorm(x, layer_params["ln1"], cfg.norm_eps)
         win = _layer_window(cfg, is_global)
-        a, (k_c, v_c) = attention_decode(
+        a, kv = attention_decode(
             layer_params["attn"], h, cfg, k_c, v_c, pos,
             cos=cos, sin=sin, window=win, decode_block=decode_block,
             page_tables=page_tables, page_block=page_block,
-            paged_decode_block=paged_decode_block, ctx=ctx)
+            paged_decode_block=paged_decode_block,
+            k_scale=ks, v_scale=vs, ctx=ctx)
         x = x + a
         h = rmsnorm(x, layer_params["ln2"], cfg.norm_eps)
         m, _ = _mlp_or_moe(layer_params, cfg, h, ctx)
-        return x + m, (k_c, v_c)
+        return x + m, kv
 
-    x, (k_new, v_new) = jax.lax.scan(
-        body, x, (params["blocks"], flags, cache["k"], cache["v"]))
+    xs = (params["blocks"], flags, cache["k"], cache["v"])
+    if quant:
+        xs = xs + (cache["k_scale"], cache["v_scale"])
+    x, kv_new = jax.lax.scan(body, x, xs)
     x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
     logits = unembed(params["embed"], x, ctx)
-    new_cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+    new_cache = {"k": kv_new[0], "v": kv_new[1], "pos": pos + 1}
+    if quant:
+        new_cache["k_scale"], new_cache["v_scale"] = kv_new[2], kv_new[3]
     return logits, new_cache

@@ -86,12 +86,21 @@ class Plan:
     # grad accumulator and Adam moments, degraded only when f32 can't fit
     accum_dtype: str = "float32"
     moment_dtype: str = "float32"
-    cache_dtype: str = "default"     # "default" (model dtype) | "int8"
+    cache_dtype: str = "default"     # any repro.core.dtypes spelling
     notes: list[str] = dataclasses.field(default_factory=list)
 
     @property
+    def kv_spec(self):
+        """The shared KV dtype descriptor (``repro.core.dtypes``) this
+        plan's ``cache_dtype`` string resolves to — the same vocabulary
+        the serving pool and ``launch/dryrun.py`` use."""
+        from repro.core.dtypes import kv_dtype_spec
+
+        return kv_dtype_spec(self.cache_dtype)
+
+    @property
     def cache_dtype_bytes(self) -> Optional[int]:
-        return 1 if self.cache_dtype == "int8" else None
+        return self.kv_spec.bytes
 
     @property
     def expand_kv(self) -> bool:

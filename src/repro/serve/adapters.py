@@ -118,10 +118,28 @@ class FamilyCacheAdapter:
         return bool(self.length_keys)
 
     def init_pool(self, model, slots: int, kv_len: int, *,
-                  expand_kv: bool = False) -> dict:
-        """The family's decode cache with a per-row (ragged) ``pos``."""
-        cache = model.init_cache(slots, kv_len, expand_kv=expand_kv,
-                                 cache_dtype=None)
+                  expand_kv: bool = False, kv_dtype: str = "fp32",
+                  block_size: int = 16) -> dict:
+        """The family's decode cache with a per-row (ragged) ``pos``.
+
+        ``kv_dtype="int8"`` allocates the length-bearing keys as int8
+        codes and adds a per-(physical block, kv head) f32 scale array
+        per key (``k_scale``/``v_scale``, shaped ``(L, slots, kv_len /
+        block_size, G)``), initialized to the ZERO dead-block sentinel —
+        no block carries a meaningful scale until a tenant writes one."""
+        from repro.core.dtypes import kv_dtype_spec
+
+        spec = kv_dtype_spec(kv_dtype)
+        quantize = spec.quantized and bool(self.length_keys)
+        cache = model.init_cache(
+            slots, kv_len, expand_kv=expand_kv,
+            cache_dtype=spec.dtype if quantize else None)
+        if quantize:
+            for key in self.length_keys:
+                arr = cache[key]                    # (L, B, T, G, hd)
+                cache[key + "_scale"] = jnp.zeros(
+                    arr.shape[:2] + (kv_len // block_size, arr.shape[3]),
+                    jnp.float32)
         cache["pos"] = jnp.zeros((slots,), jnp.int32)   # per-row, ragged
         return cache
 
@@ -134,7 +152,8 @@ class FamilyCacheAdapter:
         return self.extras(model, rows) if self.extras else {}
 
     def write_row(self, cache: dict, slot: int, row_cache: dict,
-                  prompt_len: int, kv_len: int, page_map=None) -> dict:
+                  prompt_len: int, kv_len: int, page_map=None,
+                  scale_map=None, page_block=None) -> dict:
         """Scatter a single-row prefill cache into the pool at ``slot``.
         Length-bearing keys are right-padded from the prompt bucket to
         the pool row; everything else (recurrent states, cross KV) lands
@@ -146,6 +165,15 @@ class FamilyCacheAdapter:
         PAGED write: only the prompt's own tokens scatter into the
         leased blocks (no full-row copy, no tail padding; positions past
         the prompt are masked by ``pos`` until decode overwrites them).
+
+        On a quantized pool (``k_scale``/``v_scale`` present),
+        ``scale_map`` (the lease's flat physical block indices, logical
+        order) and ``page_block`` drive the quantizing write: the
+        prompt's values quantize per (logical block, kv head) symmetric
+        amax scale, the scales scatter to the prompt's physical blocks,
+        and every OTHER leased block's scale is ZEROED — the dead-block
+        sentinel that stops a recycled block's previous-tenant scale
+        from ever aliasing into the new request's dequant.
 
         Example::
 
@@ -159,8 +187,14 @@ class FamilyCacheAdapter:
             row = arr[:, 0]                        # (L, ...) single row
             if key in self.length_keys and page_map is not None:
                 n, b, t = out[key].shape[0], out[key].shape[1], kv_len
+                vals = row[:, :prompt_len]
+                if key + "_scale" in out:
+                    assert scale_map is not None and page_block is not None
+                    vals, out = self._quantize_prompt(
+                        out, key, vals, prompt_len, kv_len,
+                        scale_map, int(page_block))
                 flat = out[key].reshape((n, b * t) + out[key].shape[3:])
-                flat = flat.at[:, page_map].set(row[:, :prompt_len])
+                flat = flat.at[:, page_map].set(vals)
                 out[key] = flat.reshape(out[key].shape)
                 continue
             if key in self.length_keys:
@@ -172,17 +206,57 @@ class FamilyCacheAdapter:
         out["pos"] = out["pos"].at[slot].set(prompt_len)
         return out
 
+    def _quantize_prompt(self, out: dict, key: str, vals, prompt_len: int,
+                         kv_len: int, scale_map, bs: int):
+        """Quantize one prompt's ``(L, prompt_len, G, hd)`` values to
+        int8 codes with per-(logical block, kv head) amax scales, and
+        land the scales on the lease's physical blocks (prompt blocks
+        get their amax scale, the rest of the lease gets the zero dead
+        sentinel).  Returns (codes, updated cache dict)."""
+        n, g = vals.shape[0], vals.shape[2]
+        npb = -(-prompt_len // bs)
+        pad = npb * bs - prompt_len
+        v = jnp.pad(vals.astype(jnp.float32),
+                    ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = v.reshape(n, npb, bs, g, -1)
+        sc = jnp.max(jnp.abs(v), axis=(2, 4)) / 127.0        # (L, npb, G)
+        safe = jnp.where(sc > 0, sc, 1.0)
+        codes = jnp.clip(jnp.round(v / safe[:, :, None, :, None]),
+                         -127, 127)
+        codes = codes.reshape(n, npb * bs, g, -1)[:, :prompt_len]
+        codes = codes.astype(out[key].dtype)
+        skey = key + "_scale"
+        b = out[skey].shape[1]
+        nb = kv_len // bs
+        sflat = out[skey].reshape(n, b * nb, g)
+        sm = jnp.asarray(scale_map, jnp.int32)
+        sflat = sflat.at[:, sm[:npb]].set(sc)
+        if len(scale_map) > npb:                 # zero the lease's tail
+            sflat = sflat.at[:, sm[npb:]].set(0.0)
+        out[skey] = sflat.reshape(out[skey].shape)
+        return codes, out
+
     def grow(self, cache: dict, new_len: int) -> dict:
         """Pad the length-bearing arrays up to the new bucket.  A cache
         with no time axis returns unchanged — the bucket step is then
-        purely a KV-block accounting event."""
+        purely a KV-block accounting event.  Quantized pools pad their
+        scale arrays' block axis with ZEROS (the dead-block sentinel):
+        the new physical blocks carry no scale until leased and
+        written, exactly like recycled ones."""
         out = dict(cache)
         for key in self.length_keys:
-            pad = new_len - out[key].shape[2]
+            t_old = out[key].shape[2]
+            pad = new_len - t_old
             assert pad > 0, "grow called without a longer bucket"
             widths = ((0, 0), (0, 0), (0, pad)) + \
                 ((0, 0),) * (out[key].ndim - 3)
             out[key] = jnp.pad(out[key], widths)
+            skey = key + "_scale"
+            if skey in out:
+                bs = t_old // out[skey].shape[2]     # layout block size
+                pad_nb = new_len // bs - out[skey].shape[2]
+                out[skey] = jnp.pad(out[skey],
+                                    ((0, 0), (0, 0), (0, pad_nb), (0, 0)))
         return out
 
 

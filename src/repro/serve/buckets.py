@@ -27,6 +27,7 @@ import dataclasses
 from typing import Any, Optional
 
 from repro.configs.base import ModelConfig
+from repro.core.dtypes import kv_dtype_spec
 from repro.core.hw import TpuParams, detect
 from repro.core.mapper import MappingPolicy
 from repro.obs.trace import get_tracer, using_tracer
@@ -194,6 +195,10 @@ class KernelRow:
     desc: Any                                          # (cfg, bucket, db, geo) -> dict
     extract: Any                                       # plan -> plan value
     needs_geometry: bool = False                       # requires page geometry
+    #: the kernel streams the KV cache, so its desc dtype follows the
+    #: pool's storage dtype (int8 under a quantized pool), not the model
+    #: compute dtype — prefill (flash) never reads the pool and stays put
+    cache_kernel: bool = False
 
 
 #: the per-bucket kernel set, declaratively.  Adding a bucket-tuned
@@ -206,7 +211,8 @@ KERNEL_TABLE: tuple[KernelRow, ...] = (
         desc=lambda cfg, b, db, geo: {
             "s": b.kv_len, "d": cfg.head_dim,
             "dtype": cfg.dtype, "dtype_bytes": db},
-        extract=lambda plan: int(plan)),
+        extract=lambda plan: int(plan),
+        cache_kernel=True),
     KernelRow(
         kernel="flash_attention",
         applies=lambda cfg: not cfg.is_attention_free,
@@ -224,7 +230,8 @@ KERNEL_TABLE: tuple[KernelRow, ...] = (
             "max_blocks_per_row": geo["max_blocks_per_row"],
             "dtype": cfg.dtype, "dtype_bytes": db},
         extract=lambda plan: int(plan),
-        needs_geometry=True),
+        needs_geometry=True,
+        cache_kernel=True),
 )
 
 
@@ -267,10 +274,15 @@ class BucketRouter:
                  cache: Optional[TuningCache] = None,
                  measure: str = "off", store: Optional[Any] = None,
                  page_block: Optional[int] = None,
+                 kv_dtype: str = "fp32",
                  tracer: Optional[Any] = None):
         self.cfg = cfg
         self.spec = spec
         self.slots = slots
+        #: pool storage dtype — a tuning dimension: cache-streaming
+        #: kernel rows resolve at the pool's byte width, and the bucket
+        #: signature carries it so fp32/int8 plans never alias
+        self.kv_spec = kv_dtype_spec(kv_dtype)
         self.hw = hw if hw is not None else detect()
         self.policy = MappingPolicy(policy)
         self.cache = cache
@@ -320,7 +332,8 @@ class BucketRouter:
             policy=self.policy,
             kv_heads=max(self.cfg.num_kv_heads, 1),
             head_dim=self.cfg.head_dim,
-            layers=self.cfg.num_layers)
+            layers=self.cfg.num_layers,
+            kv_dtype=self.kv_spec.name)
 
     def _dtype_bytes(self) -> int:
         return 2 if self.cfg.dtype == "bfloat16" else 4
@@ -363,8 +376,15 @@ class BucketRouter:
                                                  and geo is None):
                     values[row.kernel], infos[row.kernel] = None, None
                     continue
-                kplan, info = self._resolve_kernel(
-                    row.kernel, row.desc(self.cfg, bucket, db, geo))
+                desc = row.desc(self.cfg, bucket, db, geo)
+                if row.cache_kernel and self.kv_spec.quantized:
+                    # cache-streaming sweeps read int8 codes: the planner
+                    # sees the true byte width (4x vmem headroom), so the
+                    # quantized pool can resolve a DIFFERENT block than
+                    # the fp32 pool on the same bucket
+                    desc["dtype"] = self.kv_spec.dtype
+                    desc["dtype_bytes"] = self.kv_spec.bytes
+                kplan, info = self._resolve_kernel(row.kernel, desc)
                 values[row.kernel] = row.extract(kplan)
                 infos[row.kernel] = info
             plan = BucketPlan(bucket=bucket, sig=sig,

@@ -55,6 +55,7 @@ from repro.models import build_model
 from repro.obs.trace import get_tracer
 from repro.runtime import sharding as shd
 from repro.serve.adapters import get_adapter
+from repro.core.dtypes import kv_dtype_spec
 from repro.serve.buckets import BucketRouter, BucketSpec
 from repro.serve.kvcache import KVCachePool
 from repro.serve.metrics import ServeMetrics, ServeSummary
@@ -163,13 +164,14 @@ class ServeEngine:
                  block_size: int = 16,
                  total_blocks: Optional[int] = None,
                  paged: bool = True,
+                 kv_dtype: str = "fp32",
                  fused_decode: bool = True,
                  use_prefill_tiles: bool = True,
                  eos_id: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic,
                  tracer: Optional[Any] = None,
                  retune: str | RetuneConfig | None = "off",
-                 prefill_chunk: int | str | None = None,
+                 prefill_chunk: int | str | None = "auto",
                  verbose: bool = False):
         cfg = get_config(arch) if isinstance(arch, str) else arch
         if isinstance(arch, str) and reduced:
@@ -209,10 +211,20 @@ class ServeEngine:
         self.params = params if params is not None \
             else self.model.init(jax.random.key(0))
 
+        # pool storage dtype: "fp32" keeps today's bit-exact pool (and
+        # lowers byte-identical HLO); "int8" stores symmetric per-(block,
+        # head) codes + scales and requires the paged layout (scales are
+        # keyed on physical blocks)
+        self.kv_spec = kv_dtype_spec(kv_dtype)
+        if self.kv_spec.quantized and not paged:
+            raise ValueError(
+                f"kv_dtype={self.kv_spec.name!r} requires paged=True: "
+                "quantization scales are per physical block")
         self.router = BucketRouter(cfg, self.spec, slots=slots, hw=hw,
                                    policy=policy, cache=tuning_cache,
                                    measure=measure, store=store,
                                    page_block=block_size if paged else None,
+                                   kv_dtype=self.kv_spec.name,
                                    tracer=self.obs)
         self._block_size = block_size
         self._total_blocks = total_blocks
@@ -244,7 +256,8 @@ class ServeEngine:
                     f"physical block grid ({cap0})")
         self.pool = KVCachePool(slots, kv0, block_size=block_size,
                                 total_blocks=total_blocks,
-                                max_len=self.spec.max_len)
+                                max_len=self.spec.max_len,
+                                kv_dtype=self.kv_spec.name)
         self.scheduler = Scheduler(self.pool, mode=admission)
         self.metrics = ServeMetrics()
         self.outputs: dict[int, list[int]] = {}
@@ -258,9 +271,10 @@ class ServeEngine:
                                static_argnames=("decode_block",
                                                 "page_block",
                                                 "paged_decode_block"))
-        #: chunked prefill: None = whole-prompt (today's path); an int is
-        #: the chunk width; "auto" derives it from the tuned flash tiles
-        #: (block_q — prefill advances in the tile quanta the tuner chose)
+        #: chunked prefill: "auto" (the default) derives the chunk width
+        #: from the tuned flash tiles (block_q — prefill advances in the
+        #: tile quanta the tuner chose); an int fixes the width; None
+        #: opts back out to whole-prompt prefill
         if prefill_chunk is not None and not isinstance(prefill_chunk, int) \
                 and prefill_chunk != "auto":
             raise ValueError(f"prefill_chunk must be None, an int, or "
@@ -282,7 +296,9 @@ class ServeEngine:
                                            tracer=self.obs, store=store,
                                            cache=tuning_cache)
         self._cache = self.adapter.init_pool(self.model, slots, kv0,
-                                             expand_kv=self.plan.expand_kv)
+                                             expand_kv=self.plan.expand_kv,
+                                             kv_dtype=self.kv_spec.name,
+                                             block_size=block_size)
         self._tables = np.full((slots, self.pool.max_blocks_per_row), -1,
                                np.int32)
         self._tables_dev = None      # device-array memo (tables are data
@@ -307,6 +323,7 @@ class ServeEngine:
                 slots=slots, max_len=self.spec.max_len,
                 hw=self.router.hw.name, paged=paged,
                 fused_decode=fused_decode,
+                kv_dtype=self.kv_spec.name,
                 **(self.router._geometry() or {}))
 
     def reset(self) -> None:
@@ -319,12 +336,15 @@ class ServeEngine:
         self.pool = KVCachePool(self.slots, kv0,
                                 block_size=self._block_size,
                                 total_blocks=self._total_blocks,
-                                max_len=self.spec.max_len)
+                                max_len=self.spec.max_len,
+                                kv_dtype=self.kv_spec.name)
         self.scheduler = Scheduler(self.pool, mode=self._admission)
         self.metrics = ServeMetrics()
         self.outputs = {}
         self._cache = self.adapter.init_pool(self.model, self.slots, kv0,
-                                             expand_kv=self.plan.expand_kv)
+                                             expand_kv=self.plan.expand_kv,
+                                             kv_dtype=self.kv_spec.name,
+                                             block_size=self._block_size)
         self._tables = np.full((self.slots, self.pool.max_blocks_per_row),
                                -1, np.int32)
         self._tables_dev = None
@@ -392,6 +412,15 @@ class ServeEngine:
             flat_position(pid, tok, self.slots, self.pool.kv_len, bs),
             jnp.int32)
 
+    def _scale_map(self, blocks: list[int]) -> np.ndarray:
+        """Flat scale-array indices of one request's leased blocks: the
+        scale grid is the cache's physical block grid flattened to
+        (slots * blocks_per_row), so pid -> (pid % slots) * nb + pid //
+        slots — the same identity the fused kernels resolve in-sweep."""
+        nb = self.pool.kv_len // self._block_size
+        pid = np.asarray(blocks, np.int64)
+        return ((pid % self.slots) * nb + pid // self.slots).astype(np.int32)
+
     # -- intake -----------------------------------------------------------
 
     def submit(self, req: Request | list[int], *,
@@ -438,15 +467,19 @@ class ServeEngine:
             self.metrics.add_prefill_time(time.perf_counter() - t0)
         self.obs.count("admits")
 
-        pm = None
+        pm = sm = None
         if self.paged:
             blocks = self.pool.lease(req.rid).blocks
             self._tables[req.slot] = self.pool.block_table(req.rid)
             self._tables_dev = None
             pm = self._page_map(blocks, req.prompt_len)
+            if self.kv_spec.quantized:
+                sm = self._scale_map(blocks)
         self._cache = self.adapter.write_row(self._cache, req.slot, rcache,
                                              req.prompt_len,
-                                             self.pool.kv_len, page_map=pm)
+                                             self.pool.kv_len, page_map=pm,
+                                             scale_map=sm,
+                                             page_block=self._block_size)
         first = int(jnp.argmax(logits[0, -1]))
         req.generated.append(first)
         self._tokens[req.slot, 0] = first
@@ -488,10 +521,18 @@ class ServeEngine:
             self._tables_dev = None
         cache = self.model.init_cache(1, pb,
                                       expand_kv=self.plan.expand_kv)
+        # length-bound caches clamp the chunk to the row: exact-mode
+        # buckets are the raw prompt length while the auto width (tuned
+        # block_q) is padded to a tile multiple, so an unclamped chunk
+        # would overrun the cache write.  Length-free row caches (ssm)
+        # keep the configured width — their compile key is the width
+        # alone, and clamping would leak one compile per short prompt.
+        chunk = self._chunk_size(tiles)
+        if self.adapter.grows_with_len:
+            chunk = min(chunk, pb)
         task = _ChunkTask(req=req, cache=cache,
                           toks=np.asarray(req.prompt, np.int32), pb=pb,
-                          tiles=tiles, chunk=self._chunk_size(tiles),
-                          blocks=blocks)
+                          tiles=tiles, chunk=chunk, blocks=blocks)
         self._chunk_tasks.append(task)
         self._prefilling[req.rid] = task
         self.metrics.on_admit(req.rid, now)
@@ -527,12 +568,16 @@ class ServeEngine:
 
     def _finish_chunked(self, task: _ChunkTask, logits, n: int) -> None:
         req = task.req
-        pm = None
+        pm = sm = None
         if self.paged:
             pm = self._page_map(task.blocks, req.prompt_len)
+            if self.kv_spec.quantized:
+                sm = self._scale_map(task.blocks)
         self._cache = self.adapter.write_row(self._cache, req.slot,
                                              task.cache, req.prompt_len,
-                                             self.pool.kv_len, page_map=pm)
+                                             self.pool.kv_len, page_map=pm,
+                                             scale_map=sm,
+                                             page_block=self._block_size)
         first = int(jnp.argmax(logits[0, n - 1]))
         req.generated.append(first)
         self._tokens[req.slot, 0] = first

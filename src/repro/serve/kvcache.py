@@ -157,11 +157,20 @@ class KVCachePool:
 
     def __init__(self, slots: int, kv_len: int, *, block_size: int = 16,
                  total_blocks: Optional[int] = None,
-                 max_len: Optional[int] = None):
+                 max_len: Optional[int] = None,
+                 kv_dtype: str = "fp32"):
+        from repro.core.dtypes import kv_dtype_spec
+
         if slots <= 0:
             raise ValueError("need at least one slot")
         self.slots = slots
         self.kv_len = kv_len
+        #: how the cache arrays backing this pool store elements; when
+        #: quantized, the adapter keeps per-(physical block, kv head)
+        #: symmetric scales alongside the block table (zero = dead
+        #: block: recycled blocks can never leak a stale tenant's scale)
+        self.kv_spec = kv_dtype_spec(kv_dtype)
+        self.kv_dtype = self.kv_spec.name
         self.max_len = max_len if max_len is not None else kv_len
         if self.max_len < kv_len:
             raise ValueError("max_len below the initial row length")

@@ -65,7 +65,7 @@ def _run(cfg, params, prompts=PROMPTS, **kw):
 class TestDenseExactness:
     def test_chunked_matches_whole_prefill(self, dense_setup):
         cfg, params = dense_setup
-        whole, _ = _run(cfg, params)
+        whole, _ = _run(cfg, params, prefill_chunk=None)
         for chunk in (2, 3):
             chunked, rep = _run(cfg, params, prefill_chunk=chunk)
             assert chunked == whole, f"chunk={chunk} changed tokens"
@@ -73,7 +73,7 @@ class TestDenseExactness:
 
     def test_auto_chunk_uses_tuned_tile(self, dense_setup):
         cfg, params = dense_setup
-        whole, _ = _run(cfg, params)
+        whole, _ = _run(cfg, params, prefill_chunk=None)
         chunked, rep = _run(cfg, params, prefill_chunk="auto")
         assert chunked == whole
         # auto = the prompt bucket's tuned block_q: every chunk shape in
@@ -87,6 +87,23 @@ class TestDenseExactness:
         _, rep = _run(cfg, params, prefill_chunk=2)
         assert rep.compiled_chunk_shapes == 1
         assert rep.compiled_decode_shapes == 1
+
+    def test_exact_mode_clamps_auto_chunk_to_prompt(self, dense_setup):
+        """mode="exact" prompt buckets are the RAW prompt length while
+        the auto chunk width (the tuned block_q) is padded up to a tile
+        multiple — the chunk must clamp to the row or the chunked cache
+        write overruns an exact-length cache."""
+        from repro.serve import BucketSpec
+
+        cfg, params = dense_setup
+        prompts = [list(range(1, 53))]       # 52 tokens: no tile multiple
+        spec = BucketSpec(min_len=32, max_len=64, mode="exact")
+        whole, _ = _run(cfg, params, prompts=prompts, prefill_chunk=None,
+                        spec=spec, paged=False)
+        chunked, rep = _run(cfg, params, prompts=prompts, spec=spec,
+                            paged=False)          # default chunking on
+        assert chunked == whole
+        assert rep.summary.n_completed == 1
 
     def test_invalid_chunk_config_rejected(self, dense_setup):
         from repro.serve import ServeEngine
@@ -136,7 +153,8 @@ class TestInterleaving:
         long_prompt = list(range(1, 33))             # 16 chunks at width 2
         short = [5, 6, 7]
 
-        whole, _ = _run(cfg, params, prompts=[short, long_prompt])
+        whole, _ = _run(cfg, params, prompts=[short, long_prompt],
+                        prefill_chunk=None)
 
         eng = ServeEngine(cfg, slots=2, max_len=64, params=params,
                           tuning_cache=TuningCache(path=None),

@@ -269,7 +269,7 @@ def traced_run():
     tracer = Tracer()
     eng = ServeEngine("smollm-135m", slots=2, max_len=32, reduced=True,
                       tracer=tracer, tuning_cache=TuningCache(path=None),
-                      verbose=False)
+                      prefill_chunk=None, verbose=False)
     for i, (plen, out) in enumerate([(4, 3), (7, 2), (5, 4), (3, 2)]):
         eng.submit(list(range(1, plen + 1)), max_new_tokens=out,
                    arrival=0.01 * i)

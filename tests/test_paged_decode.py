@@ -189,8 +189,12 @@ def test_fused_engine_token_exact_all_families(arch):
     ref = _sequential_reference(cfg, params, _PROMPTS, _MAX_NEW)
 
     for fused in (True, False):
+        # whole-prompt prefill: the pin is BITWISE token equality with a
+        # one-request-at-a-time reference, so the chunked default's
+        # float-reordering (argmax flips on random-init weights) is
+        # opted out — chunked parity has its own suite
         eng = ServeEngine(cfg, slots=2, max_len=64, params=params,
-                          fused_decode=fused,
+                          fused_decode=fused, prefill_chunk=None,
                           tuning_cache=TuningCache(path=None))
         reqs = [eng.submit(p, max_new_tokens=_MAX_NEW) for p in _PROMPTS]
         report = eng.run()
@@ -279,6 +283,10 @@ def _check_column_major_roundtrip(slots, nb, bs, pid, pos):
     # the flat index decomposes uniquely — no two (pid, pos%bs) collide
     assert (flat // t, (flat % t) // bs, flat % bs) \
         == (row, off // bs, pos % bs)
+    # the quantized pool's scale cell is the SAME identity: a token's
+    # flat cache index, divided by the block size, is its block's flat
+    # scale index — codes and scales can never resolve different blocks
+    assert (pid % slots) * nb + pid // slots == flat // bs
 
 
 def _check_retired_scatter_drops(seed):
@@ -314,6 +322,70 @@ def _check_retired_scatter_drops(seed):
     np.testing.assert_array_equal(out.reshape(b * t, g, d), expected)
 
 
+def _check_scales_never_alias_across_recycles(seed):
+    """Random admit/retire traffic through an int8 pool: after every
+    prompt write, the new lease's scale cells hold ONLY the new
+    tenant's scales (prompt blocks) or zero (lease tail), and no other
+    cell — live tenants' or free blocks' — moved at all.  A recycled
+    block can therefore never dequantize through a previous tenant's
+    scale."""
+    import jax.numpy as jnp
+
+    from repro.serve import get_adapter
+
+    rng = np.random.default_rng(seed)
+    adapter = get_adapter("dense")
+    n_l, slots, bs, g, hd = 2, 2, 8, 2, 4
+    kv_len = 32
+    nb = kv_len // bs
+    cache = {"k": jnp.zeros((n_l, slots, kv_len, g, hd), jnp.int8),
+             "v": jnp.zeros((n_l, slots, kv_len, g, hd), jnp.int8),
+             "k_scale": jnp.zeros((n_l, slots, nb, g), jnp.float32),
+             "v_scale": jnp.zeros((n_l, slots, nb, g), jnp.float32),
+             "pos": jnp.zeros((slots,), jnp.int32)}
+    pool = KVCachePool(slots, kv_len, block_size=bs, max_len=kv_len)
+    live, rid = [], 0
+    for _ in range(12):
+        if live and (rng.random() < 0.4 or pool.free_slots == 0):
+            pool.retire(live.pop(rng.integers(len(live))))
+            continue
+        proj = int(rng.integers(1, kv_len + 1))
+        if not pool.fits(proj):
+            continue
+        plen = int(rng.integers(1, proj + 1))
+        lease = pool.admit(rid, proj)
+        live.append(rid)
+        rid += 1
+        pid = np.asarray(lease.blocks)
+        tok = np.arange(plen)
+        p = pid[tok // bs]
+        pm = jnp.asarray((p % slots) * kv_len + (p // slots) * bs
+                         + tok % bs, jnp.int32)
+        sm = ((pid % slots) * nb + pid // slots).astype(np.int32)
+        vals = rng.standard_normal((n_l, 1, plen, g, hd)).astype(np.float32)
+        row = {"k": jnp.asarray(vals), "v": jnp.asarray(vals),
+               "pos": jnp.asarray(plen, jnp.int32)}
+        before = np.asarray(cache["k_scale"]).reshape(n_l, slots * nb, g)
+        cache = adapter.write_row(cache, lease.slot, row, plen, kv_len,
+                                  page_map=pm, scale_map=sm,
+                                  page_block=bs)
+        after = np.asarray(cache["k_scale"]).reshape(n_l, slots * nb, g)
+        npb = -(-plen // bs)
+        pad = npb * bs - plen
+        v = np.pad(vals[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        want = np.abs(v.reshape(n_l, npb, bs, g, hd)).max((2, 4)) / 127.0
+        np.testing.assert_allclose(after[:, sm[:npb]], want, rtol=1e-5,
+                                   err_msg="prompt scales wrong")
+        assert not after[:, sm[npb:]].any(), \
+            "lease tail kept a previous tenant's scale"
+        untouched = np.ones(slots * nb, bool)
+        untouched[sm] = False
+        np.testing.assert_array_equal(after[:, untouched],
+                                      before[:, untouched],
+                                      err_msg="scale write aliased "
+                                              "outside the lease")
+
+
 if HAVE_HYPOTHESIS:
     table_ops_st = st.lists(
         st.tuples(st.sampled_from(["admit", "retire", "grow"]),
@@ -337,6 +409,11 @@ if HAVE_HYPOTHESIS:
     def test_retired_scatter_writes_drop(seed):
         _check_retired_scatter_drops(seed)
 
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1 << 30))
+    def test_scales_never_alias_across_recycles(seed):
+        _check_scales_never_alias_across_recycles(seed)
+
 
 def test_table_invariants_seeded_sweep():
     """Hypothesis-free fallback: the same block-table properties over
@@ -352,6 +429,8 @@ def test_table_invariants_seeded_sweep():
             rng.randint(0, 1 << 16), rng.randint(0, 1 << 16))
     for seed in range(5):
         _check_retired_scatter_drops(seed)
+    for seed in range(3):
+        _check_scales_never_alias_across_recycles(seed)
 
 
 # --------------------------------------------------------------------------- #

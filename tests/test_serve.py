@@ -351,7 +351,12 @@ def test_engine_matches_sequential_decode_families(arch):
     params = build_model(cfg).init(jax.random.key(0))
     ref = _sequential_reference(cfg, params, prompts, max_new)
 
+    # whole-prompt prefill: the pin is BITWISE equality with the
+    # one-request-at-a-time reference; the chunked default reorders
+    # float accumulation in the hybrid recurrence (argmax flips on
+    # random-init weights) — chunked parity has its own suite
     eng = ServeEngine(cfg, slots=2, max_len=64, params=params,
+                      prefill_chunk=None,
                       tuning_cache=TuningCache(path=None))
     reqs = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
     report = eng.run()

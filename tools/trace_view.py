@@ -59,7 +59,8 @@ def main(argv=None) -> int:
     spans = tracer.spans()
     meta = tracer.meta
     print(f"# {args.trace}: {len(spans)} spans, "
-          f"arch={meta.get('arch', '?')} hw_meta={meta.get('hw', '?')}")
+          f"arch={meta.get('arch', '?')} hw_meta={meta.get('hw', '?')} "
+          f"kv_dtype={meta.get('kv_dtype', 'fp32')}")
     if tracer.counters():
         print("# counters: " + " ".join(
             f"{k}={v:g}" for k, v in sorted(tracer.counters().items())))
