@@ -124,6 +124,19 @@ def main():
                          "default) uses the bucket's tuned flash tile "
                          "(block_q) as the chunk; 'none' opts out to "
                          "whole-prompt prefill")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix sharing: requests whose prompts "
+                         "share a leading token run alias the SAME "
+                         "physical KV blocks (refcounted) and resume "
+                         "prefill mid-prompt — system-prompt traffic "
+                         "stops recomputing its preamble.  Engages on "
+                         "paged + chunked-prefill attention families "
+                         "(dense/moe); a no-op elsewhere")
+    ap.add_argument("--shared-prefix", type=int, metavar="N", default=0,
+                    help="give 90%% of synthesized requests a common "
+                         "N-token preamble (the traffic shape "
+                         "--prefix-cache exists for; 0 = independent "
+                         "prompts)")
     ap.add_argument("--kv-dtype", choices=("fp32", "int8"), default="fp32",
                     help="KV pool storage dtype: int8 stores symmetric "
                          "per-(block, head) codes + scales (~1/4 of the "
@@ -152,7 +165,9 @@ def main():
         prompt_dist=("uniform", lo, min(hi, 48)),
         output_dist=("uniform", 2, args.max_new),
         concurrency=args.slots, vocab=vocab,
-        seed=int(rng.integers(1 << 30)))
+        seed=int(rng.integers(1 << 30)),
+        shared_prefix=((args.shared_prefix, 0.9)
+                       if args.shared_prefix else None))
     tracer = None
     if args.trace:
         from repro.obs import Tracer
@@ -168,7 +183,7 @@ def main():
         spec=BucketSpec(max_len=args.max_len, mode=args.bucket_mode),
         policy=args.policy, measure=args.measure, tracer=tracer,
         retune=args.retune, prefill_chunk=chunk,
-        kv_dtype=args.kv_dtype,
+        kv_dtype=args.kv_dtype, prefix_cache=args.prefix_cache,
         verbose=True)
     report = drive(engine, traffic)
     s = report.summary
@@ -182,6 +197,12 @@ def main():
         st = report.retune["stats"]
         print(f"[serve] retune: scans={st['scans']} trials={st['trials']} "
               f"adopted={st['adopted']} rejected={st['rejected']}")
+    if report.radix is not None:
+        rx = report.radix
+        print(f"[serve] radix: hit rate {rx['hit_rate']:.2f} "
+              f"({rx['hits']}/{rx['lookups']}), "
+              f"{rx['hit_tokens']} prompt tokens reused, "
+              f"{rx['evicted_blocks']} blocks evicted")
     if tracer is not None:
         from repro.obs import write_trace
         path = write_trace(tracer, args.trace)
@@ -196,6 +217,7 @@ def main():
             "pool_growths": report.pool_growths,
             "n_rejected": len(report.rejected),
             "retune": report.retune,
+            "radix": report.radix,
         }
         with open(args.metrics_json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)

@@ -205,12 +205,21 @@ def make_prefill_step(model: Model, plan: Plan, max_len: Optional[int],
     ``prefill_tiles`` — the router-resolved flash (block_q, block_k) —
     is meant to be jitted as a STATIC argument: a new tile pair is a new
     prompt bucket, and bucket changes are the (lattice-bounded) compile
-    events.  ``None`` keeps the GSPMD prefill path byte-identical."""
+    events.  ``None`` keeps the GSPMD prefill path byte-identical.
+
+    ``pad_to`` (static, ``max_len=None`` only) overrides the cache pad
+    target when the row is LONGER than the token batch — the vlm
+    family's rows carry ``prefix_tokens`` patch positions before token
+    0, so its serving cache pads to ``prefix + bucket``, not the token
+    bucket alone.  ``None`` (the default) keeps the original behaviour
+    byte-identical."""
     ctx = make_ctx(plan)
     ctx.flags.update(flags or {})
 
-    def prefill_step(params, batch, last_pos=None, prefill_tiles=None):
-        ml = max_len if max_len is not None else batch["tokens"].shape[1]
+    def prefill_step(params, batch, last_pos=None, prefill_tiles=None,
+                     pad_to=None):
+        ml = max_len if max_len is not None else (
+            pad_to if pad_to is not None else batch["tokens"].shape[1])
         return model.prefill(params, batch, ml, last_pos=last_pos,
                              prefill_tiles=prefill_tiles, ctx=ctx)
 

@@ -682,6 +682,20 @@ def _cache_write(cache, new, pos, *, page_tables=None, page_block=None):
     return jax.lax.dynamic_update_slice_in_dim(cache, new, pos, axis=1)
 
 
+def _chunk_cache_write(cache, new, start):
+    """Write one C-row prompt chunk at positions ``start..start+C-1``.
+
+    A scatter, NOT ``dynamic_update_slice``: a radix-resumed chunk's
+    ``start`` is the match's resume position, which need not be
+    chunk-aligned, so the slab may overhang the cache row —
+    ``dynamic_update_slice`` would CLAMP the start back inside and
+    silently clobber the seeded prefix rows.  Overhanging rows here
+    carry only the tail chunk's padding garbage; dropping them is the
+    contract (``chunk_prefill_step``'s docstring)."""
+    idx = start + jnp.arange(new.shape[1])
+    return cache.at[:, idx].set(new.astype(cache.dtype), mode="drop")
+
+
 def _cache_read(cache, compute_dtype):
     if cache.dtype == jnp.int8:
         return (cache.astype(jnp.float32) / KV_INT8_SCALE

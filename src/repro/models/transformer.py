@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import moe as moe_mod
 from repro.models.attention import (_cache_read, _cache_write,
+                                    _chunk_cache_write,
                                     attention_block, attention_decode,
                                     attention_specs, _project_qkv,
                                     tiled_prefill_attention)
@@ -323,8 +324,11 @@ def chunk_prefill_step(
         sin = jnp.where(is_global, sin_g, sin_l) if cfg.local_global_ratio else sin_g
         h = rmsnorm(x, layer_params["ln1"], cfg.norm_eps)
         q, k, v = _project_qkv(layer_params["attn"], h, cfg, cos, sin, ctx)
-        k_c = _cache_write(k_c, k, start)
-        v_c = _cache_write(v_c, v, start)
+        # scatter, not dynamic_update_slice: a radix-resumed chunk's
+        # start is not chunk-aligned, and the slab's overhang must DROP
+        # rather than clamp-clobber the seeded prefix rows
+        k_c = _chunk_cache_write(k_c, k, start)
+        v_c = _chunk_cache_write(v_c, v, start)
         o = tiled_prefill_attention(
             q, _cache_read(k_c, x.dtype), _cache_read(v_c, x.dtype),
             block_q=bq, block_k=bk, causal=True,

@@ -17,6 +17,10 @@ the thing that picks each shape bucket's kernel plans:
                  physical under ``ServeEngine(paged=True)``: leases
                  export block tables the kernels scatter/gather through,
   ``scheduler``  FIFO queue + admission control + slot recycling,
+  ``radix``      trie-indexed prefix sharing: requests with a common
+                 prompt prefix alias the same physical KV blocks
+                 (refcounted, COW boundary, LRU eviction) and resume
+                 prefill mid-prompt,
   ``engine``     the prefill/decode interleaving loop itself,
   ``retune``     live in-flight retuning: drift-triggered re-resolve +
                  A/B-guarded plan hot-swap between decode ticks,
@@ -31,6 +35,7 @@ from repro.serve.buckets import (Bucket, BucketPlan, BucketRouter,
                                  RouterStats)
 from repro.serve.engine import ServeEngine, ServeReport
 from repro.serve.kvcache import BlockAllocator, KVCachePool, Lease
+from repro.serve.radix import MatchResult, RadixCache, RadixStats
 from repro.serve.retune import (RETUNE_MODES, RetuneConfig, RetuneController,
                                 RetuneStats, SwapDecision)
 from repro.serve.metrics import (RequestRecord, ServeMetrics, ServeSummary,
@@ -53,7 +58,10 @@ __all__ = [
     "KVCachePool",
     "Lease",
     "get_adapter",
+    "MatchResult",
     "percentile",
+    "RadixCache",
+    "RadixStats",
     "Request",
     "RequestRecord",
     "RETUNE_MODES",

@@ -20,7 +20,11 @@ padding is safe:
   hybrid      k/v per attention group + position-free ssm state/conv;
   encdec      self-attention k/v grow; cross ck/cv are static per row;
   ssm         state/conv only — nothing carries a time axis, the pool
-              "grows" in block accounting alone.
+              "grows" in block accounting alone;
+  vlm         dense k/v, but every cache position is SHIFTED by the
+              config's ``prefix_tokens`` image-patch positions — the
+              adapter's ``position_offset`` is that shift, and all of
+              the pool's capacity/page/position math adds it.
 
 Prompt padding: attention caches mask per-row length, so right-padding a
 prompt to its bucket never leaks — but a *recurrent* state after the
@@ -112,10 +116,29 @@ class FamilyCacheAdapter:
     length_keys: tuple[str, ...] = ("k", "v")
     prefill_buckets: bool = True
     extras: Optional[Callable[[Any, int], dict]] = None
+    #: cache positions a request occupies before its first token (the
+    #: vlm prefix patches); ``None`` means 0 for every model
+    prefix_offset: Optional[Callable[[Any], int]] = None
+    #: True when the family's whole per-position sequence state lives in
+    #: the paged k/v blocks, so a prompt prefix cached by one request is
+    #: complete context for another (radix prefix sharing) — attention
+    #: caches with no carried recurrent state and chunked prefill
+    shareable_prefix: bool = False
 
     @property
     def grows_with_len(self) -> bool:
         return bool(self.length_keys)
+
+    def position_offset(self, model: Any) -> int:
+        """Cache positions before token 0 for this model (vlm: the
+        image-patch prefix ``cfg.prefix_tokens``; 0 elsewhere).
+
+        Example::
+
+            >>> get_adapter("dense").position_offset(None)
+            0
+        """
+        return self.prefix_offset(model) if self.prefix_offset else 0
 
     def init_pool(self, model, slots: int, kv_len: int, *,
                   expand_kv: bool = False, kv_dtype: str = "fp32",
@@ -153,33 +176,42 @@ class FamilyCacheAdapter:
 
     def write_row(self, cache: dict, slot: int, row_cache: dict,
                   prompt_len: int, kv_len: int, page_map=None,
-                  scale_map=None, page_block=None) -> dict:
+                  scale_map=None, page_block=None, start: int = 0) -> dict:
         """Scatter a single-row prefill cache into the pool at ``slot``.
         Length-bearing keys are right-padded from the prompt bucket to
         the pool row; everything else (recurrent states, cross KV) lands
         shape-exact.  The row's ``pos`` becomes the true prompt length —
         the mask/rope boundary, regardless of padding.
 
-        ``page_map`` (prompt_len,) — flat physical positions from the
-        request's block table — switches the length-bearing keys to the
-        PAGED write: only the prompt's own tokens scatter into the
-        leased blocks (no full-row copy, no tail padding; positions past
-        the prompt are masked by ``pos`` until decode overwrites them).
+        ``page_map`` (prompt_len - start,) — flat physical positions
+        from the request's block table — switches the length-bearing
+        keys to the PAGED write: only the prompt's own tokens scatter
+        into the leased blocks (no full-row copy, no tail padding;
+        positions past the prompt are masked by ``pos`` until decode
+        overwrites them).
+
+        ``start`` (block-aligned, paged-only) begins the write
+        mid-prompt: positions ``[0, start)`` live in radix-SHARED blocks
+        another request already wrote, and this write must never touch
+        them — neither their values nor, on a quantized pool, their
+        scale rows (shared blocks share their scales).
 
         On a quantized pool (``k_scale``/``v_scale`` present),
         ``scale_map`` (the lease's flat physical block indices, logical
         order) and ``page_block`` drive the quantizing write: the
         prompt's values quantize per (logical block, kv head) symmetric
-        amax scale, the scales scatter to the prompt's physical blocks,
-        and every OTHER leased block's scale is ZEROED — the dead-block
-        sentinel that stops a recycled block's previous-tenant scale
-        from ever aliasing into the new request's dequant.
+        amax scale, the scales scatter to the written blocks, and every
+        leased block PAST the prompt gets the zero dead sentinel — which
+        stops a recycled block's previous-tenant scale from ever
+        aliasing into the new request's dequant.
 
         Example::
 
             cache = adapter.write_row(cache, lease.slot, row_cache,
                                       len(prompt), pool.kv_len)
         """
+        assert start == 0 or page_map is not None, \
+            "mid-prompt write start requires the paged path"
         out = dict(cache)
         for key, arr in row_cache.items():
             if key == "pos":
@@ -187,15 +219,16 @@ class FamilyCacheAdapter:
             row = arr[:, 0]                        # (L, ...) single row
             if key in self.length_keys and page_map is not None:
                 n, b, t = out[key].shape[0], out[key].shape[1], kv_len
-                vals = row[:, :prompt_len]
+                vals = row[:, start:prompt_len]
                 if key + "_scale" in out:
                     assert scale_map is not None and page_block is not None
                     vals, out = self._quantize_prompt(
-                        out, key, vals, prompt_len, kv_len,
+                        out, key, vals, start, prompt_len, kv_len,
                         scale_map, int(page_block))
-                flat = out[key].reshape((n, b * t) + out[key].shape[3:])
-                flat = flat.at[:, page_map].set(vals)
-                out[key] = flat.reshape(out[key].shape)
+                if prompt_len > start:
+                    flat = out[key].reshape((n, b * t) + out[key].shape[3:])
+                    flat = flat.at[:, page_map].set(vals)
+                    out[key] = flat.reshape(out[key].shape)
                 continue
             if key in self.length_keys:
                 pad = kv_len - row.shape[1]
@@ -206,31 +239,40 @@ class FamilyCacheAdapter:
         out["pos"] = out["pos"].at[slot].set(prompt_len)
         return out
 
-    def _quantize_prompt(self, out: dict, key: str, vals, prompt_len: int,
-                         kv_len: int, scale_map, bs: int):
-        """Quantize one prompt's ``(L, prompt_len, G, hd)`` values to
-        int8 codes with per-(logical block, kv head) amax scales, and
-        land the scales on the lease's physical blocks (prompt blocks
-        get their amax scale, the rest of the lease gets the zero dead
-        sentinel).  Returns (codes, updated cache dict)."""
+    def _quantize_prompt(self, out: dict, key: str, vals, start: int,
+                         prompt_len: int, kv_len: int, scale_map, bs: int):
+        """Quantize one prompt's ``(L, prompt_len - start, G, hd)``
+        values to int8 codes with per-(logical block, kv head) amax
+        scales, and land the scales on the lease's physical blocks
+        (written blocks get their amax scale, leased blocks past the
+        prompt get the zero dead sentinel, and the radix-shared blocks
+        BEFORE ``start`` are never touched — a shared block's scale row
+        belongs to the block, not the lease).  Returns (codes, updated
+        cache dict)."""
+        assert start % bs == 0, "write start must be block-aligned"
         n, g = vals.shape[0], vals.shape[2]
+        sb0 = start // bs
         npb = -(-prompt_len // bs)
-        pad = npb * bs - prompt_len
-        v = jnp.pad(vals.astype(jnp.float32),
-                    ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = v.reshape(n, npb, bs, g, -1)
-        sc = jnp.max(jnp.abs(v), axis=(2, 4)) / 127.0        # (L, npb, G)
-        safe = jnp.where(sc > 0, sc, 1.0)
-        codes = jnp.clip(jnp.round(v / safe[:, :, None, :, None]),
-                         -127, 127)
-        codes = codes.reshape(n, npb * bs, g, -1)[:, :prompt_len]
-        codes = codes.astype(out[key].dtype)
+        nw = npb - sb0                            # blocks being written
         skey = key + "_scale"
         b = out[skey].shape[1]
         nb = kv_len // bs
         sflat = out[skey].reshape(n, b * nb, g)
         sm = jnp.asarray(scale_map, jnp.int32)
-        sflat = sflat.at[:, sm[:npb]].set(sc)
+        if nw > 0:
+            pad = npb * bs - prompt_len
+            v = jnp.pad(vals.astype(jnp.float32),
+                        ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = v.reshape(n, nw, bs, g, -1)
+            sc = jnp.max(jnp.abs(v), axis=(2, 4)) / 127.0     # (L, nw, G)
+            safe = jnp.where(sc > 0, sc, 1.0)
+            codes = jnp.clip(jnp.round(v / safe[:, :, None, :, None]),
+                             -127, 127)
+            codes = codes.reshape(n, nw * bs, g, -1)[:, :prompt_len - start]
+            codes = codes.astype(out[key].dtype)
+            sflat = sflat.at[:, sm[sb0:npb]].set(sc)
+        else:
+            codes = vals.astype(out[key].dtype)
         if len(scale_map) > npb:                 # zero the lease's tail
             sflat = sflat.at[:, sm[npb:]].set(0.0)
         out[skey] = sflat.reshape(out[skey].shape)
@@ -268,16 +310,37 @@ def _encdec_frames(model, rows: int) -> dict:
                                 model.dtype)}
 
 
+def _vlm_patches(model, rows: int) -> dict:
+    """Stub image patch embeddings (the vision tower is a stub repo-wide,
+    mirroring ``_encdec_frames``); shaped per request row."""
+    cfg = model.cfg
+    return {"patches": jnp.zeros((rows, cfg.prefix_tokens, cfg.d_model),
+                                 model.dtype)}
+
+
 #: family -> adapter: the single registry the engine consults instead of
-#: a family capability check.  ``vlm`` is the one absent family — its
-#: prefix patch tokens shift every cache position by ``prefix_tokens``,
-#: which the pool's position accounting does not model yet.
+#: a family capability check.  All six families are served; ``vlm``
+#: rides the dense cache layout with a ``position_offset`` of
+#: ``cfg.prefix_tokens`` image-patch positions, which the scheduler,
+#: page maps, and growth math all add.  ``shareable_prefix`` marks the
+#: families whose paged k/v blocks are a PURE FUNCTION of the prefix
+#: tokens (radix prefix sharing): dense only.  moe is out — expert
+#: CAPACITY routing couples every token's hidden state (hence its
+#: deeper-layer k/v) to the other tokens in its routing group, so a
+#: cached prefix block carries its original chunk-mates' fingerprint
+#: and aliasing it is not byte-identical to recomputing
+#: (``tests/test_prefix_cache.py`` pins this exclusion).  hybrid
+#: carries a recurrent state outside the blocks, ssm has no blocks at
+#: all, encdec/vlm prepend non-token context — none of them can alias
+#: a prompt prefix.
 ADAPTERS: dict[str, CacheAdapter] = {
-    "dense": FamilyCacheAdapter("dense"),
+    "dense": FamilyCacheAdapter("dense", shareable_prefix=True),
     "moe": FamilyCacheAdapter("moe"),
     "ssm": FamilyCacheAdapter("ssm", length_keys=(), prefill_buckets=False),
     "hybrid": FamilyCacheAdapter("hybrid"),
     "encdec": FamilyCacheAdapter("encdec", extras=_encdec_frames),
+    "vlm": FamilyCacheAdapter("vlm", extras=_vlm_patches,
+                              prefix_offset=lambda m: m.cfg.prefix_tokens),
 }
 
 

@@ -59,6 +59,7 @@ from repro.core.dtypes import kv_dtype_spec
 from repro.serve.buckets import BucketRouter, BucketSpec
 from repro.serve.kvcache import KVCachePool
 from repro.serve.metrics import ServeMetrics, ServeSummary
+from repro.serve.radix import RadixCache
 from repro.serve.retune import RetuneConfig, RetuneController
 from repro.serve.scheduler import Request, Scheduler
 from repro.tuner import TuningCache
@@ -81,6 +82,9 @@ class _ChunkTask:
     chunk: int                     # chunk width C (static by shape)
     blocks: Optional[list] = None  # leased block ids (paged pools)
     done: int = 0                  # prompt tokens consumed so far
+    #: first prompt position write_row scatters (block-aligned; the
+    #: positions before it live in radix-SHARED blocks, never rewritten)
+    start: int = 0
 
 
 @dataclasses.dataclass
@@ -107,6 +111,9 @@ class ServeReport:
     #: retune controller accounting + concluded swap decisions
     #: (``None`` when the engine runs with ``retune="off"``)
     retune: Optional[dict] = None
+    #: radix prefix-cache accounting (hit rate, evictions; ``None`` when
+    #: ``prefix_cache=False`` or the family cannot share prefixes)
+    radix: Optional[dict] = None
 
 
 class ServeEngine:
@@ -172,12 +179,15 @@ class ServeEngine:
                  tracer: Optional[Any] = None,
                  retune: str | RetuneConfig | None = "off",
                  prefill_chunk: int | str | None = "auto",
+                 prefix_cache: bool = False,
                  verbose: bool = False):
         cfg = get_config(arch) if isinstance(arch, str) else arch
         if isinstance(arch, str) and reduced:
             cfg = cfg.reduced()
         # one registry lookup decides serveability (raises for families
-        # with no adapter, e.g. vlm's position-shifting patch prefix)
+        # with no adapter); the adapter also carries the family's cache
+        # position offset (vlm's patch prefix) and whether its paged
+        # blocks are complete per-position context (radix sharing)
         self.adapter = get_adapter(cfg.family)
         self.cfg = cfg
         self.slots = slots
@@ -254,23 +264,6 @@ class ServeEngine:
                 raise ValueError(
                     f"paged mode: total_blocks={total_blocks} exceeds the "
                     f"physical block grid ({cap0})")
-        self.pool = KVCachePool(slots, kv0, block_size=block_size,
-                                total_blocks=total_blocks,
-                                max_len=self.spec.max_len,
-                                kv_dtype=self.kv_spec.name)
-        self.scheduler = Scheduler(self.pool, mode=admission)
-        self.metrics = ServeMetrics()
-        self.outputs: dict[int, list[int]] = {}
-
-        # prefill_tiles is static: a new tile pair is a new prompt
-        # bucket, and bucket steps are the (lattice-bounded) compile
-        # events; same for decode_block / page_block on the decode side
-        self._prefill = jax.jit(make_prefill_step(self.model, self.plan, None),
-                                static_argnames=("prefill_tiles",))
-        self._decode = jax.jit(make_decode_step(self.model, self.plan),
-                               static_argnames=("decode_block",
-                                                "page_block",
-                                                "paged_decode_block"))
         #: chunked prefill: "auto" (the default) derives the chunk width
         #: from the tuned flash tiles (block_q — prefill advances in the
         #: tile quanta the tuner chose); an int fixes the width; None
@@ -282,6 +275,30 @@ class ServeEngine:
         self._chunk_cfg = prefill_chunk
         self._chunked = (prefill_chunk is not None
                          and self.model.supports_chunked_prefill)
+        #: cache positions before token 0 (vlm's patch prefix): every
+        #: capacity/page-map/position computation adds it
+        self._pos_offset = self.adapter.position_offset(self.model)
+        self.prefix_cache = bool(prefix_cache)
+        self.pool = KVCachePool(slots, kv0, block_size=block_size,
+                                total_blocks=total_blocks,
+                                max_len=self.spec.max_len,
+                                kv_dtype=self.kv_spec.name)
+        self._radix = self._make_radix()
+        self.scheduler = Scheduler(self.pool, mode=admission,
+                                   radix=self._radix,
+                                   pos_offset=self._pos_offset)
+        self.metrics = ServeMetrics()
+        self.outputs: dict[int, list[int]] = {}
+
+        # prefill_tiles is static: a new tile pair is a new prompt
+        # bucket, and bucket steps are the (lattice-bounded) compile
+        # events; same for decode_block / page_block on the decode side
+        self._prefill = jax.jit(make_prefill_step(self.model, self.plan, None),
+                                static_argnames=("prefill_tiles", "pad_to"))
+        self._decode = jax.jit(make_decode_step(self.model, self.plan),
+                               static_argnames=("decode_block",
+                                                "page_block",
+                                                "paged_decode_block"))
         self._chunk_step = jax.jit(
             make_chunk_prefill_step(self.model, self.plan),
             static_argnames=("prefill_tiles",))
@@ -324,7 +341,23 @@ class ServeEngine:
                 hw=self.router.hw.name, paged=paged,
                 fused_decode=fused_decode,
                 kv_dtype=self.kv_spec.name,
+                prefix_cache=self._radix is not None,
                 **(self.router._geometry() or {}))
+
+    def _make_radix(self) -> Optional[RadixCache]:
+        """A fresh radix prefix cache over the CURRENT pool's allocator
+        — or ``None`` when sharing cannot engage: the feature is off,
+        the pool is not physically paged (no tables to alias through),
+        prefill is not chunked (no mid-prompt resume), or the family's
+        blocks are not complete per-position context
+        (``adapter.shareable_prefix``).  A ``prefix_cache=True`` engine
+        on a non-shareable family still serves correctly — lookups
+        simply never run (hit rate 0)."""
+        if not (self.prefix_cache and self.paged and self._chunked
+                and getattr(self.adapter, "shareable_prefix", False)):
+            return None
+        return RadixCache(self.pool.allocator, self._block_size,
+                          tracer=self.obs)
 
     def reset(self) -> None:
         """Clear traffic state but KEEP the warm machinery — jitted
@@ -338,7 +371,10 @@ class ServeEngine:
                                 total_blocks=self._total_blocks,
                                 max_len=self.spec.max_len,
                                 kv_dtype=self.kv_spec.name)
-        self.scheduler = Scheduler(self.pool, mode=self._admission)
+        self._radix = self._make_radix()
+        self.scheduler = Scheduler(self.pool, mode=self._admission,
+                                   radix=self._radix,
+                                   pos_offset=self._pos_offset)
         self.metrics = ServeMetrics()
         self.outputs = {}
         self._cache = self.adapter.init_pool(self.model, self.slots, kv0,
@@ -399,14 +435,17 @@ class ServeEngine:
         if self.verbose:
             print(f"[serve] pool -> ({self.slots}, {new_len})")
 
-    def _page_map(self, blocks: list[int], n: int) -> jax.Array:
-        """Flat physical positions of one request's first ``n`` logical
-        tokens (the prefill write path; ``kernels.paged_gather``
-        documents the pid -> location mapping)."""
+    def _page_map(self, blocks: list[int], n: int,
+                  start: int = 0) -> jax.Array:
+        """Flat physical positions of one request's logical tokens
+        ``[start, n)`` (the prefill write path; ``kernels.paged_gather``
+        documents the pid -> location mapping).  ``start`` skips the
+        radix-shared prefix — positions another lease already wrote and
+        this one must never scatter into."""
         from repro.kernels.paged_gather import flat_position
 
         bs = self._block_size
-        tok = np.arange(n)
+        tok = np.arange(start, n)
         pid = np.asarray(blocks, np.int64)[tok // bs]
         return jnp.asarray(
             flat_position(pid, tok, self.slots, self.pool.kv_len, bs),
@@ -445,24 +484,32 @@ class ServeEngine:
         if self._chunked:
             self._admit_chunked(req, now)
             return
-        pb = self.adapter.prefill_len(req.prompt_len,
-                                      self.router.quantize_prompt)
+        # the family's cache-position offset (vlm: prefix_tokens image
+        # patches before token 0) shifts EVERY cache position: the
+        # prompt bucket covers offset + prompt, the cache row pads to
+        # offset + bucket (``pad_to``), and the final-token logits sit
+        # at sequence position offset + prompt_len - 1
+        off = self._pos_offset
+        plen = req.prompt_len
+        pb = self.adapter.prefill_len(off + plen,
+                                      self.router.quantize_prompt) - off
         toks = np.zeros((1, pb), np.int32)
-        toks[0, :req.prompt_len] = req.prompt
+        toks[0, :plen] = req.prompt
         batch = {"tokens": jnp.asarray(toks),
                  **self.adapter.prefill_extras(self.model, 1)}
-        last = jnp.asarray([req.prompt_len - 1], jnp.int32)
+        last = jnp.asarray([off + plen - 1], jnp.int32)
         self.compiled_prefill_shapes.add(pb)
         # the prompt bucket's EXECUTED flash tiles — resolved by the
         # router (warm buckets: memo hit, zero probes), jitted static
-        tiles = self.router.prefill_tiles(pb) if self.use_prefill_tiles \
-            else None
+        tiles = self.router.prefill_tiles(off + pb) \
+            if self.use_prefill_tiles else None
         with self.obs.span("prefill", rid=req.rid,
-                           prompt_len=req.prompt_len, bucket=pb,
+                           prompt_len=plen, bucket=pb,
                            tiles=tiles):
             t0 = time.perf_counter()
             logits, rcache = self._prefill(self.params, batch, last,
-                                           prefill_tiles=tiles)
+                                           prefill_tiles=tiles,
+                                           pad_to=(off + pb) if off else None)
             logits = jax.block_until_ready(logits)
             self.metrics.add_prefill_time(time.perf_counter() - t0)
         self.obs.count("admits")
@@ -472,11 +519,11 @@ class ServeEngine:
             blocks = self.pool.lease(req.rid).blocks
             self._tables[req.slot] = self.pool.block_table(req.rid)
             self._tables_dev = None
-            pm = self._page_map(blocks, req.prompt_len)
+            pm = self._page_map(blocks, off + plen)
             if self.kv_spec.quantized:
                 sm = self._scale_map(blocks)
         self._cache = self.adapter.write_row(self._cache, req.slot, rcache,
-                                             req.prompt_len,
+                                             off + plen,
                                              self.pool.kv_len, page_map=pm,
                                              scale_map=sm,
                                              page_block=self._block_size)
@@ -500,10 +547,20 @@ class ServeEngine:
     def _admit_chunked(self, req: Request, now: float) -> None:
         """Seat the request (slot + blocks leased, capacity held) but
         run its prefill chunk-by-chunk between decode ticks instead of
-        all at once.  Until the row lands, decode skips the request;
-        interim decode writes into the leased row are provably dead —
-        ``write_row`` replaces every length key / recurrent state and
-        resets the row's ``pos`` when the prefill completes."""
+        all at once.  The slot's block-table row is NOT published until
+        the row lands (``_finish_chunked``): a recycled slot's stale
+        ``pos`` would otherwise scatter interim decode writes through
+        the new table — harmlessly into private blocks before prefix
+        sharing, but into another request's data once the leading
+        entries alias radix-shared blocks.  Unpublished (-1) rows drop
+        their writes in ``_cache_write``, and decode skips the request
+        until ``write_row`` lands the finished row.
+
+        With a radix match pending (``RadixCache.prepare`` ran at
+        admission), the matched prefix seeds the private row cache —
+        shared full blocks plus the copied boundary tail — and chunked
+        prefill RESUMES mid-prompt at the traced start offset, paying
+        compute only for the private suffix."""
         if self.adapter.prefill_buckets:
             pb = self.adapter.prefill_len(req.prompt_len,
                                           self.router.quantize_prompt)
@@ -517,8 +574,6 @@ class ServeEngine:
         blocks = None
         if self.paged:
             blocks = self.pool.lease(req.rid).blocks
-            self._tables[req.slot] = self.pool.block_table(req.rid)
-            self._tables_dev = None
         cache = self.model.init_cache(1, pb,
                                       expand_kv=self.plan.expand_kv)
         # length-bound caches clamp the chunk to the row: exact-mode
@@ -533,10 +588,70 @@ class ServeEngine:
         task = _ChunkTask(req=req, cache=cache,
                           toks=np.asarray(req.prompt, np.int32), pb=pb,
                           tiles=tiles, chunk=chunk, blocks=blocks)
+        if self._radix is not None:
+            m = self._radix.claim(req.rid)
+            if m is not None and m.hit:
+                self._radix_seed(task, m)
+            self._radix.seeded(req.rid)
         self._chunk_tasks.append(task)
         self._prefilling[req.rid] = task
         self.metrics.on_admit(req.rid, now)
         self.obs.count("admits")
+
+    def _radix_seed(self, task: _ChunkTask, m) -> None:
+        """Seed a chunk task's private row cache from its radix match:
+        gather the matched positions' k/v out of the pool's physical
+        blocks (dequantizing on int8 pools — the boundary tail is
+        re-quantized by ``write_row``, the bounded-error COW the int8
+        tests budget for), land them at the row's leading positions, and
+        move the traced resume offset past them.  The matched FULL
+        blocks stay shared (``task.start`` keeps ``write_row`` off
+        them); the tail's tokens become private data the moment they
+        enter the row cache."""
+        bs = self._block_size
+        plen = task.req.prompt_len
+        resume = m.resume(plen, bs)
+        if resume <= 0:
+            return
+        from repro.kernels.paged_gather import flat_position
+
+        tok = np.arange(resume)
+        pid = np.empty(resume, np.int64)
+        nfull = len(m.blocks) * bs
+        if nfull:
+            pid[:nfull] = np.asarray(m.blocks, np.int64)[tok[:nfull] // bs]
+        if resume > nfull:
+            pid[nfull:] = m.tail_block
+        flat = jnp.asarray(
+            flat_position(pid, tok, self.slots, self.pool.kv_len, bs),
+            jnp.int32)
+        cache = dict(task.cache)
+        for key in self.adapter.length_keys:
+            arr = self._cache[key]                   # (L, B, T, G, hd)
+            n, b, t = arr.shape[0], arr.shape[1], arr.shape[2]
+            vals = arr.reshape((n, b * t) + arr.shape[3:])[:, flat]
+            skey = key + "_scale"
+            if skey in self._cache:
+                # per-(physical block, kv head) symmetric dequant — the
+                # same flat scale identity the fused kernels resolve
+                nb = t // bs
+                sidx = jnp.asarray(
+                    ((pid % self.slots) * nb + pid // self.slots)
+                    .astype(np.int32))
+                sarr = self._cache[skey]             # (L, B, nb, G)
+                scl = sarr.reshape(n, b * nb, -1)[:, sidx]   # (L, r, G)
+                vals = vals.astype(jnp.float32) * scl[..., None]
+            cache[key] = cache[key].at[:, 0, :resume].set(
+                vals.astype(cache[key].dtype))
+        cache["pos"] = jnp.int32(resume)
+        task.cache = cache
+        task.start = m.write_start(bs)
+        task.done = resume
+        n_hit = resume
+        self._radix.stats.hit_tokens += n_hit
+        self.obs.instant("radix_hit", rid=task.req.rid, tokens=n_hit,
+                         shared_blocks=len(m.blocks), tail=m.tail_len)
+        self.obs.count("radix_hit_tokens", n_hit)
 
     def _prefill_tick(self) -> bool:
         """Advance the oldest in-flight chunked prefill by ONE chunk —
@@ -570,14 +685,31 @@ class ServeEngine:
         req = task.req
         pm = sm = None
         if self.paged:
-            pm = self._page_map(task.blocks, req.prompt_len)
+            # publish the slot's table row only now — see _admit_chunked
+            self._tables[req.slot] = self.pool.block_table(req.rid)
+            self._tables_dev = None
+            pm = self._page_map(task.blocks, req.prompt_len,
+                                start=task.start)
             if self.kv_spec.quantized:
                 sm = self._scale_map(task.blocks)
+            # decode appends land in the prompt's boundary block onward;
+            # sharing discipline requires that block be PRIVATE (shared
+            # blocks are read-only by contract)
+            assert self.pool.refcount(
+                task.blocks[req.prompt_len // self._block_size]) == 1, \
+                "decode-append block is shared"
         self._cache = self.adapter.write_row(self._cache, req.slot,
                                              task.cache, req.prompt_len,
                                              self.pool.kv_len, page_map=pm,
                                              scale_map=sm,
-                                             page_block=self._block_size)
+                                             page_block=self._block_size,
+                                             start=task.start)
+        if self._radix is not None:
+            # index the request's fully-written prompt blocks (shared
+            # prefix nodes are reused; only new nodes retain); the
+            # partial tail joins at retirement, once decode stops
+            # appending into it
+            self._radix.insert(req.prompt, task.blocks)
         first = int(jnp.argmax(logits[0, n - 1]))
         req.generated.append(first)
         self._tokens[req.slot, 0] = first
@@ -659,6 +791,11 @@ class ServeEngine:
                 and req.generated[-1] == self.eos_id
             if req.done or eos:
                 slot = req.slot
+                if self._radix is not None and req.rid not in self._prefilling:
+                    # the partial prompt-tail block becomes indexable
+                    # only now — its owner stops appending decode tokens
+                    self._radix.insert_tail(
+                        req.prompt, self.pool.lease(req.rid).blocks)
                 self.scheduler.finish(req)
                 if self.paged and slot is not None:
                     self._tables[slot] = -1      # unmap: blocks recycle
@@ -743,4 +880,6 @@ class ServeEngine:
                 "decisions": [dataclasses.asdict(d)
                               for d in self.retune.decisions],
             }),
+            radix=(self._radix.as_report()
+                   if self._radix is not None else None),
         )

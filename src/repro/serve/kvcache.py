@@ -13,16 +13,23 @@ one engine loop serve them all.
 
 What lives here is the *management* layer those arrays sit under:
 
-  * ``BlockAllocator`` — a shared pool of fixed-size KV blocks.  Every
-    admitted request acquires enough blocks to cover its projected
-    length and releases them on retirement.  Blocks are the admission
-    currency: the pool may be provisioned with fewer blocks than
-    ``slots * blocks_per_row`` (oversubscription control), and the
-    allocator's ownership map is the aliasing invariant the property
-    tests hammer — a block belongs to at most one live request, ever.
+  * ``BlockAllocator`` — a shared pool of fixed-size KV blocks with
+    PER-BLOCK REFCOUNTS.  Every admitted request acquires enough blocks
+    to cover its projected length and releases them on retirement.
+    Blocks are the admission currency: the pool may be provisioned with
+    fewer blocks than ``slots * blocks_per_row`` (oversubscription
+    control).  A block's refcount is the number of holders listing it —
+    live requests, plus the radix prefix cache (``serve.radix``), which
+    retains prompt-prefix blocks under the ``"radix"`` holder so later
+    requests with the same prefix can map them instead of recomputing.
+    The conservation invariant the property tests hammer: every block
+    is free XOR has refcount >= 1, and the refcount equals its holder
+    count, always.
   * ``KVCachePool`` — slot bookkeeping on top: free-slot tracking,
-    admission (slot AND blocks, atomically), retirement, and pool
-    growth when the length bucket steps up.
+    admission (slot AND blocks, atomically; optionally aliasing a
+    shared block prefix), retirement, copy-on-write block promotion
+    (``ensure_private``), and pool growth when the length bucket steps
+    up.
 
 Paging is PHYSICAL when the engine runs with ``paged=True``: the block
 ids this module hands out become real cache locations via the
@@ -37,12 +44,20 @@ gather reads through it (``models.attention._cache_write``,
 ``kernels.paged_gather``).  With ``paged=False`` the same accounting
 runs admission/recycling over slot-contiguous rows — the ids are then
 currency only.
+
+Sharing safety: a block with refcount > 1 is read-only by contract.
+The engine enforces this by construction — prefix-shared blocks occupy
+only the *leading* table entries of a request, prefill writes start at
+the first private block, and decode appends land at positions past the
+prompt, which always map to private blocks.  ``ensure_private`` is the
+accounting half of copy-on-write: it swaps a shared block out of one
+lease for a fresh private one without ever touching the shared block.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Hashable, Iterable, Optional, Sequence
 
 __all__ = ["BlockAllocator", "KVCachePool", "Lease"]
 
@@ -53,7 +68,7 @@ def ceil_div(a: int, b: int) -> int:
 
 
 class BlockAllocator:
-    """Fixed pool of KV blocks with per-request ownership tracking.
+    """Fixed pool of KV blocks with refcounted per-holder tracking.
 
     Example::
 
@@ -68,8 +83,8 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: list[int] = list(range(num_blocks - 1, -1, -1))
-        self._owner: dict[int, int] = {}          # block -> rid
-        self._held: dict[int, list[int]] = {}     # rid -> blocks
+        self._ref: dict[int, int] = {}                 # block -> refcount
+        self._held: dict[Hashable, list[int]] = {}     # holder -> blocks
 
     @property
     def free_blocks(self) -> int:
@@ -79,34 +94,103 @@ class BlockAllocator:
         """Blocks needed to cover ``tokens`` KV positions."""
         return ceil_div(max(tokens, 1), self.block_size)
 
-    def can_alloc(self, tokens: int) -> bool:
-        """True when the free list covers ``tokens`` positions."""
-        return self.blocks_for(tokens) <= len(self._free)
+    def can_alloc(self, tokens: int, shared: int = 0) -> bool:
+        """True when the free list covers ``tokens`` positions, of which
+        the first ``shared`` blocks come aliased (no free block cost)."""
+        return self.blocks_for(tokens) - shared <= len(self._free)
 
-    def alloc(self, rid: int, tokens: int) -> list[int]:
-        """Acquire blocks covering ``tokens`` for request ``rid``."""
+    def refcount(self, block: int) -> int:
+        """Current refcount of ``block`` (0 = free)."""
+        return self._ref.get(block, 0)
+
+    def alloc(self, rid: Hashable, tokens: int,
+              shared: Sequence[int] = ()) -> list[int]:
+        """Acquire blocks covering ``tokens`` for request ``rid``.
+
+        ``shared`` aliases already-live blocks (a radix prefix match) as
+        the lease's LEADING entries: their refcounts bump instead of
+        consuming the free list, and only the remainder is popped fresh.
+        """
         if rid in self._held:
             raise ValueError(f"request {rid} already holds blocks")
         n = self.blocks_for(tokens)
-        if n > len(self._free):
-            raise MemoryError(f"need {n} blocks, {len(self._free)} free")
-        got = [self._free.pop() for _ in range(n)]
+        if len(shared) > n:
+            raise ValueError(f"shared prefix ({len(shared)} blocks) longer "
+                             f"than the lease ({n})")
+        for b in shared:
+            if self._ref.get(b, 0) < 1:
+                raise ValueError(f"shared block {b} is not live")
+        fresh = n - len(shared)
+        if fresh > len(self._free):
+            raise MemoryError(f"need {fresh} blocks, {len(self._free)} free")
+        got = list(shared) + [self._free.pop() for _ in range(fresh)]
         for b in got:
-            self._owner[b] = rid
+            self._ref[b] = self._ref.get(b, 0) + 1
         self._held[rid] = got
         return list(got)
 
-    def release(self, rid: int) -> list[int]:
-        """Return ``rid``'s blocks to the pool (idempotent-unsafe: a
-        double release is a bug and raises)."""
+    def release(self, rid: Hashable) -> list[int]:
+        """Drop ``rid``'s references; blocks reaching refcount 0 return
+        to the free list (a double release is a bug and raises)."""
         blocks = self._held.pop(rid)
         for b in blocks:
-            del self._owner[b]
-        self._free.extend(blocks)
+            self._decref(b)
         return blocks
 
-    def holders(self) -> dict[int, list[int]]:
-        """Snapshot of rid -> held block ids (copies, not views)."""
+    def retain(self, holder: Hashable, blocks: Iterable[int]) -> None:
+        """Add references on live blocks under ``holder`` (the radix
+        cache's retention path; a holder never lists a block twice)."""
+        cur = self._held.setdefault(holder, [])
+        seen = set(cur)
+        for b in blocks:
+            if b in seen:
+                raise ValueError(f"holder {holder} already retains {b}")
+            if self._ref.get(b, 0) < 1:
+                raise ValueError(f"cannot retain free block {b}")
+            cur.append(b)
+            seen.add(b)
+            self._ref[b] += 1
+
+    def release_blocks(self, holder: Hashable,
+                       blocks: Iterable[int]) -> None:
+        """Drop ``holder``'s references on specific blocks (eviction /
+        pin release); blocks reaching refcount 0 free."""
+        cur = self._held.get(holder)
+        if cur is None:
+            raise KeyError(f"holder {holder} holds nothing")
+        for b in blocks:
+            cur.remove(b)                  # raises if not held — a bug
+            self._decref(b)
+        if not cur:
+            del self._held[holder]
+
+    def swap(self, holder: Hashable, old: int, new_tokens_block: bool = True
+             ) -> int:
+        """Copy-on-write accounting: replace ``holder``'s reference on
+        ``old`` (refcount > 1) with a freshly-popped private block.
+        ``old`` is NEVER mutated — only the holder's reference moves.
+        Returns the new private block id; raises ``MemoryError`` when
+        the free list is empty."""
+        cur = self._held[holder]
+        i = cur.index(old)
+        if self._ref.get(old, 0) < 1:
+            raise ValueError(f"block {old} is not live")
+        if not self._free:
+            raise MemoryError("no free block for copy-on-write")
+        new = self._free.pop()
+        cur[i] = new
+        self._ref[new] = 1
+        self._decref(old)
+        return new
+
+    def _decref(self, b: int) -> None:
+        self._ref[b] -= 1
+        if self._ref[b] == 0:
+            del self._ref[b]
+            self._free.append(b)
+
+    def holders(self) -> dict[Hashable, list[int]]:
+        """Snapshot of holder -> held block ids (copies, not views)."""
         return {r: list(bs) for r, bs in self._held.items()}
 
     def add_blocks(self, n: int) -> None:
@@ -118,19 +202,26 @@ class BlockAllocator:
         self._free.extend(range(first, first + n))
 
     def check(self) -> None:
-        """Conservation + exclusivity invariants (property-tested)."""
-        held = [b for bs in self._held.values() for b in bs]
-        assert len(held) == len(set(held)), "block aliased by two requests"
-        assert not set(held) & set(self._free), "held block also free"
-        assert len(held) + len(self._free) == self.num_blocks, "blocks lost"
-        for r, bs in self._held.items():
+        """Conservation invariants (property-tested): refcounts equal
+        holder counts, free XOR referenced partitions the pool."""
+        counts: dict[int, int] = {}
+        for bs in self._held.values():
+            assert len(bs) == len(set(bs)), "holder lists a block twice"
             for b in bs:
-                assert self._owner[b] == r, "ownership map out of sync"
+                counts[b] = counts.get(b, 0) + 1
+        assert counts == self._ref, "refcounts out of sync with holders"
+        assert not set(counts) & set(self._free), "held block also free"
+        assert len(self._free) == len(set(self._free)), "free list aliased"
+        assert len(counts) + len(self._free) == self.num_blocks, \
+            "blocks lost"
+        assert all(c >= 1 for c in counts.values())
 
 
 @dataclasses.dataclass
 class Lease:
-    """What one live request holds: a slot row + its KV blocks.
+    """What one live request holds: a slot row + its KV blocks.  The
+    first ``shared`` table entries alias radix-retained prefix blocks
+    (refcount > 1, read-only); the rest are private.
 
     Example::
 
@@ -142,6 +233,7 @@ class Lease:
     slot: int
     blocks: list[int]
     projected_len: int
+    shared: int = 0                        # leading aliased block count
 
 
 class KVCachePool:
@@ -192,15 +284,16 @@ class KVCachePool:
     def live(self) -> int:
         return len(self._leases)
 
-    def fits(self, projected_len: int) -> bool:
-        """Admission predicate: a free slot, enough blocks, and a row
-        long enough RIGHT NOW.  The row check matters beyond the queue
-        head: a later, longer request must wait for the pool to grow on
-        ITS turn at the head, not slip into rows that would silently
-        truncate its cache."""
+    def fits(self, projected_len: int, shared: int = 0) -> bool:
+        """Admission predicate: a free slot, enough blocks (the first
+        ``shared`` come aliased from the radix cache at no free-list
+        cost), and a row long enough RIGHT NOW.  The row check matters
+        beyond the queue head: a later, longer request must wait for the
+        pool to grow on ITS turn at the head, not slip into rows that
+        would silently truncate its cache."""
         return (bool(self._free_slots)
                 and projected_len <= self.kv_len
-                and self.allocator.can_alloc(projected_len))
+                and self.allocator.can_alloc(projected_len, shared))
 
     def _require_row(self, projected_len: int) -> None:
         if projected_len > self.kv_len:
@@ -209,27 +302,69 @@ class KVCachePool:
 
     # -- admission / retirement ------------------------------------------
 
-    def admit(self, rid: int, projected_len: int) -> Lease:
+    def admit(self, rid: int, projected_len: int,
+              shared: Sequence[int] = ()) -> Lease:
         """Seat a request: a slot + blocks for ``projected_len``,
-        atomically (raises without mutating when either is short)."""
+        atomically (raises without mutating when either is short).
+        ``shared`` aliases radix-retained prefix blocks as the lease's
+        leading table entries — their refcounts bump, the free list only
+        pays for the private remainder."""
         if not self._free_slots:
             raise MemoryError("no free slot")
         self._require_row(projected_len)
-        blocks = self.allocator.alloc(rid, projected_len)  # raises if short
+        blocks = self.allocator.alloc(rid, projected_len, shared=shared)
         slot = self._free_slots.pop()
         lease = Lease(rid=rid, slot=slot, blocks=blocks,
-                      projected_len=projected_len)
+                      projected_len=projected_len, shared=len(shared))
         self._leases[rid] = lease
         self._by_slot[slot] = rid
         return lease
 
     def retire(self, rid: int) -> Lease:
-        """Release ``rid``'s slot + blocks back to the pool."""
+        """Release ``rid``'s slot + block references back to the pool
+        (shared blocks survive under their remaining holders)."""
         lease = self._leases.pop(rid)
         self.allocator.release(rid)
         del self._by_slot[lease.slot]
         self._free_slots.append(lease.slot)
         return lease
+
+    def refcount(self, block: int) -> int:
+        """Refcount of a physical block (0 = free)."""
+        return self.allocator.refcount(block)
+
+    def ensure_private(self, rid: int, j: int) -> tuple[int, int]:
+        """Copy-on-write promotion for logical block ``j`` of ``rid``'s
+        lease: if the backing block is shared (refcount > 1), swap it
+        for a fresh private block and return ``(old, new)``; already
+        private returns ``(old, old)``.  PURE ACCOUNTING — the shared
+        block's contents are never touched; the caller owns migrating
+        any live data into ``new`` (the engine's seed-and-rewrite path
+        does this through the row cache).
+
+        COW is legal only at or past the shared run's LAST block: a
+        request never writes interior prefix positions (prefill resumes
+        at ``write_start``, decode appends past the prompt), so an
+        interior swap has no data to migrate and would strand aliased
+        entries behind a shrunken ``lease.shared`` — it raises instead.
+
+        Example::
+
+            old, new = pool.ensure_private(req.rid, prompt_len // bs)
+        """
+        lease = self._leases[rid]
+        old = lease.blocks[j]
+        if self.allocator.refcount(old) <= 1:
+            return old, old
+        if j < lease.shared - 1:
+            raise ValueError(
+                f"copy-on-write at interior shared block {j} (shared run "
+                f"is {lease.shared} blocks): prefix interiors are "
+                f"read-only; COW applies at the run boundary only")
+        new = self.allocator.swap(rid, old)
+        lease.blocks[j] = new
+        lease.shared = min(lease.shared, j)
+        return old, new
 
     def lease(self, rid: int) -> Lease:
         """The live ``Lease`` held by request ``rid`` (KeyError if not
@@ -287,7 +422,9 @@ class KVCachePool:
         self.kv_len = new_len
 
     def check(self) -> None:
-        """Pool-level invariants on top of the allocator's."""
+        """Pool-level invariants on top of the allocator's: slots
+        partition cleanly, and live tables are pairwise disjoint EXCEPT
+        on their shared leading prefixes (refcount > 1 by definition)."""
         self.allocator.check()
         slots_held = [l.slot for l in self._leases.values()]
         assert len(slots_held) == len(set(slots_held)), "slot double-booked"
@@ -299,3 +436,11 @@ class KVCachePool:
             assert self._by_slot[lease.slot] == rid
             assert lease.projected_len <= self.kv_len, \
                 "lease outgrew the pool row"
+            for j, b in enumerate(lease.blocks):
+                if j >= lease.shared:
+                    # private region: this lease must be the sole live
+                    # lease mapping the block (the radix cache may also
+                    # retain it, so refcount alone is not the test)
+                    for r2, l2 in self._leases.items():
+                        assert r2 == rid or b not in l2.blocks[l2.shared:], \
+                            "private block aliased by two leases"

@@ -88,13 +88,22 @@ class Scheduler:
     """
 
     def __init__(self, pool: KVCachePool, *, mode: str = "continuous",
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 radix=None, pos_offset: int = 0):
         if mode not in ADMISSION_MODES:
             raise ValueError(f"mode must be one of {ADMISSION_MODES}, "
                              f"got {mode!r}")
         self.pool = pool
         self.mode = mode
         self.max_queue = max_queue
+        #: optional ``serve.radix.RadixCache``: admission matches each
+        #: head request's prompt prefix, pins + evicts for room, and the
+        #: matched blocks alias into the lease's leading table entries
+        self.radix = radix
+        #: cache positions a request occupies BEYOND its tokens (the vlm
+        #: family's prefix-patch tokens shift every position by
+        #: ``cfg.prefix_tokens``); all capacity math adds it
+        self.pos_offset = pos_offset
         self._future: deque[Request] = deque()    # submitted, not arrived
         self._ready: deque[Request] = deque()     # arrived, waiting
         self._live: dict[int, Request] = {}
@@ -108,7 +117,7 @@ class Scheduler:
         NEVER be seated (projected length beyond the pool's maximum row
         length, or a full bounded queue) are rejected now rather than
         starved later."""
-        if req.projected_len > self.pool.max_len:
+        if req.projected_len + self.pos_offset > self.pool.max_len:
             req.rejected = True
             self.rejected.append(req)
             return False
@@ -130,13 +139,31 @@ class Scheduler:
 
     def admissible(self) -> list[Request]:
         """Pop every request admission can seat RIGHT NOW, strictly from
-        the queue head.  Callers prefill + lease each returned request."""
+        the queue head.  Callers prefill + lease each returned request.
+
+        With a radix cache attached, each head request's prompt is
+        matched FIRST: matched full-prefix blocks alias into the lease
+        (``KVCachePool.admit(shared=...)``) so admission only charges
+        the free list for the private remainder, and the match is
+        pinned/evicted-for-room inside ``RadixCache.prepare`` so a
+        later head's eviction can never free blocks this one maps."""
         if self.mode == "gang" and self._live:
             return []
         out = []
-        while self._ready and self.pool.fits(self._ready[0].projected_len):
-            req = self._ready.popleft()
-            lease = self.pool.admit(req.rid, req.projected_len)
+        while self._ready:
+            req = self._ready[0]
+            need = req.projected_len + self.pos_offset
+            shared: list[int] = []
+            if self.radix is not None:
+                shared = self.radix.prepare(req).blocks
+            if not self.pool.fits(need, shared=len(shared)):
+                if self.radix is not None:
+                    self.radix.cancel(req.rid)
+                break
+            self._ready.popleft()
+            lease = self.pool.admit(req.rid, need, shared=shared)
+            if self.radix is not None:
+                self.radix.admitted(req.rid)
             req.slot = lease.slot
             self._live[req.rid] = req
             out.append(req)
@@ -173,8 +200,11 @@ class Scheduler:
         return not (self._future or self._ready or self._live)
 
     def peek_need_len(self) -> Optional[int]:
-        """Projected length of the queue head (pool-growth decisions)."""
-        return self._ready[0].projected_len if self._ready else None
+        """Cache positions the queue head needs, including the family's
+        position offset (pool-growth decisions)."""
+        if not self._ready:
+            return None
+        return self._ready[0].projected_len + self.pos_offset
 
     def shed_head(self) -> Optional[Request]:
         """Drop the queue head into ``rejected`` — the engine's last

@@ -1,0 +1,242 @@
+"""Radix prefix sharing is INVISIBLE in the tokens (PR 10).
+
+The whole contract of ``--prefix-cache`` is that aliasing physical KV
+blocks and resuming prefill mid-prompt is an *execution* optimisation:
+
+  * token exactness — on a 90%-shared-preamble mix driven through
+    mid-decode slot recycling AND a pool-length growth step, every
+    family's greedy streams are byte-identical with the radix on and
+    off.  Dense (the shareable family) must actually HIT; for everyone
+    else ``prefix_cache=True`` must be a clean no-op;
+  * the MoE exclusion — expert-capacity routing couples a token's
+    output to its routing-group chunk-mates, so a cached prefix block
+    is NOT a pure function of prefix tokens; the adapter registry pins
+    ``shareable_prefix=False`` and the engine must refuse to build a
+    radix for it (the exactness run then holds trivially);
+  * int8 interaction — shared blocks share their per-(block, head)
+    scale rows; the radix-on int8 engine tracks its radix-on fp32 twin
+    within the PR 9 logit-error bound and reproduces the radix-off
+    token streams exactly on this mix;
+  * HLO pin — ``prefix_cache`` is data, not program: the engine lowers
+    byte-identical decode/prefill steps whether the flag is off,
+    defaulted, or on, and turning the radix ON never adds compiled
+    chunk shapes (resume offsets ride the traced ``cache["pos"]``).
+
+Streams are compared POSITIONALLY (``req.generated`` per submitted
+request) — request ids are a process-global counter, so two engines
+never see the same rids for the same traffic.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.serve import ADAPTERS, ServeEngine
+from repro.tuner import TuningCache
+
+FAMILIES = ["smollm-135m", "deepseek-moe-16b", "mamba2-1.3b",
+            "zamba2-7b", "whisper-medium", "paligemma-3b"]
+
+_MAX_NEW = 3
+
+#: one 24-token preamble (1 full 16-token block + an 8-token tail) in
+#: front of ~90% of the mix, plus a long request that steps the pool
+#: length bucket and two slots so retirement recycles mid-decode
+_PRE = [5, 9, 2, 14, 7, 3, 11, 6, 4, 13, 8, 1, 10, 12, 15, 7,
+        9, 3, 5, 2, 8, 11, 4, 6]
+
+
+def _shared_mix():
+    return [
+        _PRE + [101, 102, 103],
+        _PRE + [77] * 9,
+        _PRE + list(range(120, 134)),          # 38 tokens: growth
+        [250, 1],                              # the cold 10%
+        _PRE + [33, 44],
+        _PRE[:20] + [9, 9, 9],                 # partial-preamble branch
+    ]
+
+
+def _drive(cfg, params, prefix_cache, *, kv_dtype="fp32", spy_logits=None,
+           slots=2, max_len=96):
+    eng = ServeEngine(cfg, slots=slots, max_len=max_len, params=params,
+                      tuning_cache=TuningCache(path=None),
+                      kv_dtype=kv_dtype, prefix_cache=prefix_cache)
+    if spy_logits is not None:
+        real = eng._decode
+
+        def spy(*a, **kw):
+            lg, cache = real(*a, **kw)
+            spy_logits.append(np.asarray(lg))
+            return lg, cache
+
+        eng._decode = spy
+    reqs = [eng.submit(p, max_new_tokens=_MAX_NEW) for p in _shared_mix()]
+    report = eng.run()
+    assert report.summary.n_completed == len(reqs)
+    return eng, report, [list(r.generated) for r in reqs]
+
+
+@pytest.fixture(scope="module")
+def family_setups():
+    import jax
+
+    from repro.models import build_model
+
+    out = {}
+    for arch in FAMILIES:
+        cfg = dataclasses.replace(get_config(arch).reduced(),
+                                  dtype="float32")
+        out[arch] = (cfg, build_model(cfg).init(jax.random.key(0)))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Token exactness, all six registered families
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_token_streams_identical_radix_on_off(arch, family_setups):
+    """Byte-identical greedy streams with the radix on vs off, through
+    recycling and growth.  Dense must actually share; every non-dense
+    family must get a clean no-op (no radix object at all)."""
+    cfg, params = family_setups[arch]
+    e_off, r_off, toks_off = _drive(cfg, params, False)
+    e_on, r_on, toks_on = _drive(cfg, params, True)
+    assert toks_on == toks_off, \
+        f"{arch}: prefix cache changed the token streams"
+    assert r_off.radix is None and e_off._radix is None
+    if cfg.family == "dense":
+        assert e_on._radix is not None
+        rx = r_on.radix
+        assert rx["hits"] >= 4, rx          # 4 later preamble sharers
+        assert rx["hit_tokens"] >= 4 * 16   # each reuses >= 1 full block
+        assert rx["hit_rate"] > 0.5
+        # sharing ends the run with a consistent trie + pool
+        e_on._radix.check()
+        e_on.pool.check()
+    else:
+        assert e_on._radix is None, \
+            f"{arch}: radix must not engage off the dense family"
+        assert r_on.radix is None
+
+
+def test_dense_growth_and_recycling_happened(family_setups):
+    """The mix is only a test if it exercises the hard paths: the dense
+    run must step the pool-length bucket AND recycle a slot mid-run
+    (6 requests through 2 slots), with the radix on."""
+    cfg, params = family_setups["smollm-135m"]
+    eng, rep, _ = _drive(cfg, params, True)
+    assert rep.pool_growths >= 1, "mix never grew the pool"
+    assert rep.summary.n_completed == 6 > eng.slots
+    assert rep.radix["evicted_blocks"] >= 0      # eviction path reachable
+    # every lease is gone: all blocks either free or radix-retained
+    alloc = eng.pool.allocator
+    held = alloc.holders()
+    assert set(held) <= {"radix"}
+    assert alloc.free_blocks + len(held.get("radix", [])) == alloc.num_blocks
+
+
+# --------------------------------------------------------------------------- #
+# The MoE exclusion is pinned, not accidental
+# --------------------------------------------------------------------------- #
+
+
+def test_moe_is_not_shareable_by_contract(family_setups):
+    """Capacity routing makes an MoE token's output depend on its
+    routing-group chunk-mates (including pads and another request's
+    private suffix), so a cached prefix block is not a pure function of
+    the prefix tokens.  The adapter registry must say so, and the
+    engine must refuse to build a radix for it."""
+    assert not getattr(ADAPTERS["moe"], "shareable_prefix", False)
+    assert getattr(ADAPTERS["dense"], "shareable_prefix", False)
+    cfg, params = family_setups["deepseek-moe-16b"]
+    eng = ServeEngine(cfg, slots=2, max_len=96, params=params,
+                      tuning_cache=TuningCache(path=None),
+                      prefix_cache=True)
+    assert eng._radix is None
+
+
+# --------------------------------------------------------------------------- #
+# int8: shared blocks share scale rows, error stays in the PR 9 bound
+# --------------------------------------------------------------------------- #
+
+
+def test_int8_radix_tracks_fp32_radix_within_bound(family_setups):
+    """With the radix ON, the int8 pool's per-tick decode logits stay
+    within the PR 9 bound of the fp32 pool's (shared blocks share their
+    per-(block, head) scale rows — refcount > 1 blocks are never
+    re-quantized), and the argmax streams equal the radix-off runs."""
+    cfg, params = family_setups["smollm-135m"]
+    l32, l8 = [], []
+    e32, r32, t32 = _drive(cfg, params, True, spy_logits=l32)
+    e8, r8, t8 = _drive(cfg, params, True, kv_dtype="int8", spy_logits=l8)
+    assert r32.radix["hits"] >= 4 and r8.radix["hits"] >= 4
+    assert len(l32) == len(l8), "tick schedules diverged"
+    err = max(float(np.max(np.abs(a - b))) for a, b in zip(l32, l8))
+    scale = max(float(np.max(np.abs(a))) for a in l32)
+    assert err <= 0.05 * scale, \
+        f"int8+radix logit error {err:.4f} vs fp32 scale {scale:.2f}"
+    _, _, t_off = _drive(cfg, params, False)
+    assert t32 == t_off, "fp32 radix changed tokens"
+    assert t8 == t_off, "int8 radix changed tokens on this mix"
+
+
+# --------------------------------------------------------------------------- #
+# HLO pin: prefix sharing is data (tables / traced pos), never program
+# --------------------------------------------------------------------------- #
+
+
+def test_decode_and_prefill_lower_identically(family_setups):
+    """``prefix_cache=False`` (and the kwarg's default) lower the exact
+    same decode and prefill steps as ``prefix_cache=True``: the radix
+    moves block ids host-side; XLA never sees it."""
+    import jax.numpy as jnp
+
+    cfg, params = family_setups["smollm-135m"]
+
+    def build(**kw):
+        return ServeEngine(cfg, slots=2, max_len=96, params=params,
+                           tuning_cache=TuningCache(path=None), **kw)
+
+    default, off, on = (build(), build(prefix_cache=False),
+                        build(prefix_cache=True))
+
+    def decode_hlo(eng):
+        tables = jnp.asarray(eng._tables)
+        return eng._decode.lower(
+            eng.params, dict(eng._cache), jnp.asarray(eng._tokens),
+            decode_block=128, page_tables=tables,
+            page_block=eng._block_size, paged_decode_block=16).as_text()
+
+    assert decode_hlo(off) == decode_hlo(default), \
+        "prefix_cache=False no longer lowers the pre-radix decode step"
+    assert decode_hlo(on) == decode_hlo(off), \
+        "enabling the radix changed the lowered decode step"
+
+    def prefill_hlo(eng):
+        toks = jnp.zeros((1, 32), jnp.int32)
+        return eng._prefill.lower(
+            eng.params, {"tokens": toks},
+            last_pos=jnp.asarray([7], jnp.int32),
+            prefill_tiles=None).as_text()
+
+    assert prefill_hlo(off) == prefill_hlo(default)
+    assert prefill_hlo(on) == prefill_hlo(off), \
+        "enabling the radix changed the lowered prefill step"
+
+
+def test_radix_never_adds_chunk_shapes(family_setups):
+    """Resuming mid-prompt rides the traced ``cache['pos']`` — the
+    radix-on run compiles NO chunk-prefill shape the radix-off run
+    doesn't, and the decode shape census matches exactly."""
+    cfg, params = family_setups["smollm-135m"]
+    e_off, r_off, _ = _drive(cfg, params, False)
+    e_on, r_on, _ = _drive(cfg, params, True)
+    assert e_on.compiled_chunk_shapes <= e_off.compiled_chunk_shapes, (
+        "radix-on compiled chunk shapes the radix-off engine never saw: "
+        f"{e_on.compiled_chunk_shapes - e_off.compiled_chunk_shapes}")
+    assert r_on.compiled_decode_shapes == r_off.compiled_decode_shapes

@@ -1,0 +1,422 @@
+"""Radix prefix-cache invariants (jax-free, property-tested).
+
+The refcounted sharing machinery under ``--prefix-cache`` is pure
+accounting — ``serve.kvcache`` moves block ids, ``serve.radix`` moves
+trie edges — so its contracts are checkable at hypothesis speed without
+ever touching a device array:
+
+  * refcount conservation: every block is free XOR refcounted, and the
+    refcount equals its holder count, under ANY interleaving of
+    admit / retire / evict / grow / copy-on-write (the allocator and
+    pool ``check()`` methods assert this; the drivers here call them
+    after every single op);
+  * live block tables are pairwise disjoint EXCEPT on shared leading
+    prefixes (``KVCachePool.check``'s private-region scan);
+  * copy-on-write never mutates a block with refcount > 1: the swapped
+    block keeps its other holders, and the replacement comes off the
+    FREE list (it cannot be anyone's live data);
+  * trie invariants: node key = one full block of edge labels, a
+    node's path key is the concatenation root->here, tails strictly
+    partial and exclusive, radix holder exactly in sync with the
+    structure (``RadixCache.check``);
+  * match exactness: ``match`` returns, for every inserted prompt, the
+    FIRST writer's physical blocks for each shared prefix quantum, and
+    tail matches honour the recompute-the-last-token cap.
+
+Drivers mirror the engine's real protocol order: ``prepare`` (pin +
+evict) -> ``fits`` -> ``admit(shared=)`` -> ``admitted`` -> ``claim`` /
+``seeded`` -> ``insert`` at prefill completion -> ``insert_tail`` at
+retirement.  When hypothesis is installed the drivers run 200+ random
+examples per property (the PR's acceptance bar); a seeded sweep keeps
+the same invariants exercised on minimal installs.
+"""
+
+import random
+
+import pytest
+
+from repro.serve import KVCachePool, RadixCache, Request
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+BS = 8                      # small blocks -> dense prefix collisions
+
+
+# --------------------------------------------------------------------------- #
+# Harness: the engine's admission/retirement protocol over random traffic
+# --------------------------------------------------------------------------- #
+
+
+class _Harness:
+    """One pool + radix driven through the engine's exact protocol.
+
+    Prompts draw from three fixed preambles over a tiny alphabet, so
+    full-block matches, partial-tail matches, and cold misses all occur
+    within a handful of ops.  ``check_all`` runs after EVERY op.
+    """
+
+    def __init__(self, slots: int, seed: int, kv_len: int = 64,
+                 max_len: int = 128):
+        self.bs = BS
+        self.rng = random.Random(seed)
+        self.pool = KVCachePool(slots, kv_len, block_size=BS,
+                                max_len=max_len)
+        self.radix = RadixCache(self.pool.allocator, BS)
+        # one aligned preamble (pure full-block hits), two ragged ones
+        # (full blocks + a partial tail)
+        self.preambles = [
+            [self.rng.randrange(2, 8) for _ in range(n)]
+            for n in (2 * BS, 2 * BS + 3, BS + 5)
+        ]
+        self.live: dict[int, tuple[list, object]] = {}   # rid -> (prompt, lease)
+
+    # -- op vocabulary ----------------------------------------------------
+
+    def _prompt(self, a: int, b: int) -> list[int]:
+        pre = self.preambles[a % len(self.preambles)]
+        head = pre if a % 4 else pre[:b % (len(pre) + 1)]
+        suffix = [self.rng.randrange(2, 8) for _ in range(1 + b % 6)]
+        return list(head) + suffix
+
+    def admit(self, a: int, b: int):
+        prompt = self._prompt(a, b)
+        req = Request(prompt=prompt, max_new_tokens=1 + a % 6)
+        m = self.radix.prepare(req)
+        if not self.pool.fits(req.projected_len, shared=len(m.blocks)):
+            self.radix.cancel(req.rid)
+            return
+        lease = self.pool.admit(req.rid, req.projected_len, shared=m.blocks)
+        self.radix.admitted(req.rid)
+        assert self.radix.claim(req.rid) is m
+        # matched full blocks alias the lease's LEADING entries verbatim
+        assert lease.blocks[:len(m.blocks)] == m.blocks
+        assert lease.shared == len(m.blocks)
+        # shared full blocks never reach the decode-append block: match
+        # only takes a block the prompt covers entirely, and projected >
+        # prompt guarantees at least one block past prompt_len exists
+        plen = len(prompt)
+        assert len(m.blocks) <= plen // self.bs
+        assert len(lease.blocks) > plen // self.bs or plen % self.bs
+        # resume always leaves the last prompt token to recompute
+        assert m.resume(plen, self.bs) <= plen - 1
+        assert m.write_start(self.bs) == len(m.blocks) * self.bs
+        self.radix.seeded(req.rid)            # engine: row cache seeded
+        self.radix.insert(prompt, lease.blocks)   # prefill completed
+        self.live[req.rid] = (prompt, lease)
+
+    def retire(self, a: int, b: int):
+        if not self.live:
+            return
+        rid = sorted(self.live)[a % len(self.live)]
+        prompt, lease = self.live.pop(rid)
+        self.radix.insert_tail(prompt, lease.blocks)
+        self.pool.retire(rid)
+
+    def cow(self, a: int, b: int):
+        """Copy-on-write some logical block of some live lease."""
+        if not self.live or not self.pool.allocator.free_blocks:
+            return
+        rid = sorted(self.live)[a % len(self.live)]
+        lease = self.live[rid][1]
+        j = b % len(lease.blocks)
+        old = lease.blocks[j]
+        before = self.pool.refcount(old)
+        free_before = self._free_set()
+        if before > 1 and j < lease.shared - 1:
+            # interior prefix blocks are read-only by contract: the
+            # pool must REFUSE the swap and change nothing
+            with pytest.raises(ValueError):
+                self.pool.ensure_private(rid, j)
+            assert lease.blocks[j] == old
+            assert self.pool.refcount(old) == before
+            return
+        got_old, new = self.pool.ensure_private(rid, j)
+        assert got_old == old
+        if before > 1:
+            # the shared block was NOT mutated: its other holders keep
+            # it, and the private replacement came off the free list —
+            # it cannot be anyone's live data
+            assert new != old
+            assert self.pool.refcount(old) == before - 1
+            assert self.pool.refcount(new) == 1
+            assert new in free_before
+            assert lease.shared <= j
+        else:
+            assert new == old
+
+    def evict(self, a: int, b: int):
+        self.radix.evict(1 + a % 3)
+
+    def grow(self, a: int, b: int):
+        nxt = min(self.pool.kv_len + BS * (1 + a % 2), self.pool.max_len)
+        self.pool.grow(nxt)
+
+    # -- invariants -------------------------------------------------------
+
+    def _free_set(self):
+        alloc = self.pool.allocator
+        return set(range(alloc.num_blocks)) - {
+            b for bs in alloc.holders().values() for b in bs}
+
+    def check_all(self):
+        self.pool.check()     # conservation + disjoint-except-shared
+        self.radix.check()    # trie structure + holder sync
+        for rid, (prompt, lease) in self.live.items():
+            # every shared leading block is also radix-held -> >= 2,
+            # which is exactly why eviction can never free it
+            for blk in lease.blocks[:lease.shared]:
+                assert self.pool.refcount(blk) >= 2
+
+    def drain(self):
+        """Retire everything, evict everything: conservation means the
+        pool ends exactly as it started — every block free."""
+        for rid in sorted(self.live):
+            prompt, lease = self.live[rid]
+            self.radix.insert_tail(prompt, lease.blocks)
+            self.pool.retire(rid)
+        self.live.clear()
+        self.radix.evict(10 ** 9)
+        alloc = self.pool.allocator
+        assert alloc.free_blocks == alloc.num_blocks, "blocks leaked"
+        assert alloc.holders() == {}, "stale holders survive drain"
+        self.pool.check()
+        self.radix.check()
+
+
+_OPS = ("admit", "admit", "admit", "retire", "cow", "evict", "grow")
+
+
+def _check_interleaving(ops, slots, seed):
+    h = _Harness(slots, seed)
+    for kind, a, b in ops:
+        getattr(h, kind)(a, b)
+        h.check_all()
+    h.drain()
+
+
+# --------------------------------------------------------------------------- #
+# Match exactness against a shadow first-writer map
+# --------------------------------------------------------------------------- #
+
+
+def _check_match_exactness(choices, seed):
+    """``match`` returns the FIRST inserted block for every full prefix
+    quantum — aliasing is deterministic, not merely consistent."""
+    rng = random.Random(seed)
+    pool = KVCachePool(4, 24 * BS, block_size=BS, max_len=24 * BS,
+                       total_blocks=256)
+    radix = RadixCache(pool.allocator, BS)
+    pre = [rng.randrange(2, 8) for _ in range(3 * BS)]
+    shadow: dict[tuple, int] = {}     # full-prefix tokens -> first block
+    rid = 0
+    for cut, extra in choices:
+        prompt = pre[:1 + cut % (3 * BS)] + \
+            [rng.randrange(2, 8) for _ in range(1 + extra % 5)]
+        req = Request(prompt=prompt, max_new_tokens=2)
+        m = radix.prepare(req)
+        lease = pool.admit(req.rid, req.projected_len, shared=m.blocks)
+        radix.admitted(req.rid)
+        radix.seeded(req.rid)
+        radix.insert(prompt, lease.blocks)
+        for j in range(len(prompt) // BS):
+            shadow.setdefault(tuple(prompt[:(j + 1) * BS]), lease.blocks[j])
+        pool.retire(req.rid)      # blocks survive under the radix holder
+        rid += 1
+        # no eviction pressure in this pool: every inserted prefix must
+        # keep matching, and must match the first writer's block
+        m2 = radix.match(prompt)
+        assert len(m2.blocks) == len(prompt) // BS
+        for j, blk in enumerate(m2.blocks):
+            assert blk == shadow[tuple(prompt[:(j + 1) * BS])], \
+                "match returned a later writer's block"
+        radix.check()
+        pool.check()
+
+
+def _check_tail_semantics(seed):
+    """Tails index only at retirement, match by longest common prefix,
+    and always leave >= 1 token to recompute."""
+    rng = random.Random(seed)
+    pool = KVCachePool(2, 8 * BS, block_size=BS, max_len=8 * BS)
+    radix = RadixCache(pool.allocator, BS)
+    prompt = [rng.randrange(2, 8) for _ in range(BS + 5)]   # 1 block + 5
+    req = Request(prompt=prompt, max_new_tokens=3)
+    m = radix.prepare(req)
+    assert not m.hit
+    lease = pool.admit(req.rid, req.projected_len, shared=m.blocks)
+    radix.admitted(req.rid)
+    radix.seeded(req.rid)
+    radix.insert(prompt, lease.blocks)
+    # before retirement the partial block is still being appended to:
+    # a same-prompt lookup sees the full block only
+    m2 = radix.match(list(prompt) + [1, 1])
+    assert len(m2.blocks) == 1 and m2.tail_len == 0
+    radix.insert_tail(prompt, lease.blocks)
+    pool.retire(req.rid)
+    # now the 5-token tail matches -- but capped so the final prompt
+    # token of the QUERY is always recomputed
+    q = list(prompt) + [1]                     # extends past the tail
+    m3 = radix.match(q)
+    assert m3.tail_block == lease.blocks[1] and m3.tail_len == 5
+    q2 = list(prompt[:BS + 3])                 # ends INSIDE the tail
+    m4 = radix.match(q2)
+    assert m4.tail_len == 2, "tail match must leave one token to recompute"
+    assert m4.resume(len(q2), BS) == len(q2) - 1
+    # identical-prompt query: every full block matches, resume caps at
+    # plen - 1 even when the whole prompt is cached
+    m5 = radix.match(list(prompt))
+    assert m5.resume(len(prompt), BS) == len(prompt) - 1
+    radix.check()
+    pool.check()
+
+
+def _check_pins_block_eviction(seed):
+    """Between ``prepare`` and ``admitted``, a concurrent admission's
+    eviction can never free the matched blocks (the pin holds them at
+    refcount >= 2)."""
+    rng = random.Random(seed)
+    pool = KVCachePool(2, 8 * BS, block_size=BS, max_len=8 * BS)
+    radix = RadixCache(pool.allocator, BS)
+    prompt = [rng.randrange(2, 8) for _ in range(2 * BS + 1)]
+    req = Request(prompt=prompt, max_new_tokens=2)
+    m0 = radix.prepare(req)
+    lease = pool.admit(req.rid, req.projected_len, shared=m0.blocks)
+    radix.admitted(req.rid)
+    radix.seeded(req.rid)
+    radix.insert(prompt, lease.blocks)
+    radix.insert_tail(prompt, lease.blocks)
+    pool.retire(req.rid)
+    held = radix.blocks_indexed()
+    assert held == 3                           # 2 nodes + 1 tail
+    # a second request matches; its pin must survive a full evict sweep
+    req2 = Request(prompt=list(prompt) + [1, 2], max_new_tokens=2)
+    m = radix.prepare(req2)
+    assert len(m.blocks) == 2 and m.tail_len == 1
+    freed = radix.evict(10 ** 9)
+    assert freed == 0, "eviction freed pinned blocks"
+    for blk in m.blocks + [m.tail_block]:
+        assert pool.refcount(blk) == 2         # radix + pin
+    radix.cancel(req2.rid)
+    assert radix.evict(10 ** 9) == held        # unpinned: all evictable
+    pool.check()
+    radix.check()
+
+
+def _check_prepare_evicts_shortfall(seed):
+    """``prepare`` evicts LRU entries until the free list covers the
+    request's private remainder."""
+    rng = random.Random(seed)
+    pool = KVCachePool(2, 4 * BS, block_size=BS, max_len=4 * BS,
+                       total_blocks=4)
+    radix = RadixCache(pool.allocator, BS)
+    # fill the whole pool with retired-and-indexed blocks
+    prompt = [rng.randrange(2, 8) for _ in range(3 * BS)]
+    req = Request(prompt=prompt, max_new_tokens=BS)
+    m = radix.prepare(req)
+    lease = pool.admit(req.rid, req.projected_len, shared=m.blocks)
+    radix.admitted(req.rid)
+    radix.seeded(req.rid)
+    radix.insert(prompt, lease.blocks)
+    pool.retire(req.rid)
+    assert pool.allocator.free_blocks == 1     # 3 of 4 radix-held
+    # a cold request needing 3 fresh blocks forces 2 evictions -- and
+    # they must come from the trie's LRU end
+    cold = [rng.randrange(8, 16) for _ in range(2 * BS)]
+    req2 = Request(prompt=cold, max_new_tokens=BS)
+    m2 = radix.prepare(req2)
+    assert not m2.hit
+    assert pool.allocator.free_blocks >= 3
+    assert radix.stats.evicted_blocks >= 2
+    assert pool.fits(req2.projected_len, shared=0)
+    lease2 = pool.admit(req2.rid, req2.projected_len)
+    radix.admitted(req2.rid)
+    radix.seeded(req2.rid)
+    pool.check()
+    radix.check()
+
+
+# --------------------------------------------------------------------------- #
+# Hypothesis drivers (200+ examples per property -- the acceptance bar)
+# --------------------------------------------------------------------------- #
+
+if HAVE_HYPOTHESIS:
+    _ops_st = st.lists(
+        st.tuples(st.sampled_from(_OPS),
+                  st.integers(0, 999), st.integers(0, 999)),
+        min_size=1, max_size=30)
+
+    @settings(max_examples=200, deadline=None)
+    @given(ops=_ops_st, slots=st.integers(1, 5),
+           seed=st.integers(0, 1 << 20))
+    def test_refcount_conservation_and_disjointness(ops, slots, seed):
+        """Conservation + disjoint-except-shared + trie sync after every
+        op of a random admit/retire/COW/evict/grow interleaving, then a
+        full drain back to an all-free pool."""
+        _check_interleaving(ops, slots, seed)
+
+    @settings(max_examples=200, deadline=None)
+    @given(ops=st.lists(
+               st.tuples(st.sampled_from(("admit", "admit", "cow", "cow",
+                                          "retire")),
+                         st.integers(0, 999), st.integers(0, 999)),
+               min_size=2, max_size=30),
+           seed=st.integers(0, 1 << 20))
+    def test_cow_never_mutates_shared(ops, seed):
+        """COW-heavy mixes: ``ensure_private`` swaps references only —
+        the shared block keeps its other holders, the replacement comes
+        off the free list (asserted inside ``_Harness.cow``)."""
+        _check_interleaving(ops, 4, seed)
+
+    @settings(max_examples=200, deadline=None)
+    @given(choices=st.lists(st.tuples(st.integers(0, 999),
+                                      st.integers(0, 999)),
+                            min_size=1, max_size=12),
+           seed=st.integers(0, 1 << 20))
+    def test_match_returns_first_writer(choices, seed):
+        _check_match_exactness(choices, seed)
+
+    @settings(max_examples=200, deadline=None)
+    @given(seed=st.integers(0, 1 << 20))
+    def test_tail_and_pin_protocol(seed):
+        _check_tail_semantics(seed)
+        _check_pins_block_eviction(seed)
+        _check_prepare_evicts_shortfall(seed)
+
+
+# --------------------------------------------------------------------------- #
+# Seeded fallback (runs everywhere, hypothesis or not)
+# --------------------------------------------------------------------------- #
+
+
+def test_invariants_seeded_sweep():
+    """Minimal-install fallback: the same drivers over seeded random op
+    tapes."""
+    rng = random.Random(7)
+    for trial in range(40):
+        ops = [(rng.choice(_OPS), rng.randrange(1000), rng.randrange(1000))
+               for _ in range(rng.randrange(1, 30))]
+        _check_interleaving(ops, rng.randrange(1, 6), trial)
+    for trial in range(20):
+        choices = [(rng.randrange(1000), rng.randrange(1000))
+                   for _ in range(rng.randrange(1, 12))]
+        _check_match_exactness(choices, trial)
+    for trial in range(10):
+        _check_tail_semantics(trial)
+        _check_pins_block_eviction(trial)
+        _check_prepare_evicts_shortfall(trial)
+
+
+def test_stats_report_shape():
+    """``as_report`` mirrors the counters ServeReport.radix exposes."""
+    pool = KVCachePool(2, 4 * BS, block_size=BS)
+    radix = RadixCache(pool.allocator, BS)
+    rep = radix.as_report()
+    assert set(rep) == {"lookups", "hits", "hit_tokens", "hit_rate",
+                        "inserted_blocks", "evicted_blocks",
+                        "blocks_indexed"}
+    assert rep["hit_rate"] == 0.0 and rep["blocks_indexed"] == 0

@@ -10,10 +10,13 @@
 Reads either trace form ``obs.export`` writes (Perfetto/Chrome JSON or
 versioned JSONL), aggregates the serving spans per (phase, bucket,
 executed plan), and — when the trace's meta carries the model geometry —
-ranks measured-vs-roofline drift per bucket (``obs.drift``).  The
-``--require-*`` flags turn missing sections into a non-zero exit so the
-CI benchmark job can assert a traced serve pass produced attributable
-per-bucket rows and a parseable drift report.
+ranks measured-vs-roofline drift per bucket (``obs.drift``).  Radix
+prefix-cache activity (``radix_hit``/``radix_evict`` spans and their
+counters) gets its own sub-report.  The ``--require-*`` flags turn
+missing sections into a non-zero exit so the CI benchmark job can
+assert a traced serve pass produced attributable per-bucket rows, a
+parseable drift report, live retune swaps (``--require-swaps``), or
+actual prefix sharing (``--require-prefix-hits``).
 """
 
 from __future__ import annotations
@@ -53,6 +56,10 @@ def main(argv=None) -> int:
     ap.add_argument("--require-swaps", action="store_true",
                     help="exit 1 unless the trace records at least one "
                          "concluded retune A/B decision (live plan swap)")
+    ap.add_argument("--require-prefix-hits", action="store_true",
+                    help="exit 1 unless the trace records at least one "
+                         "radix prefix-cache hit (a request admitted "
+                         "past aliased preamble blocks)")
     args = ap.parse_args(argv)
 
     tracer = load_trace(args.trace)
@@ -101,6 +108,32 @@ def main(argv=None) -> int:
               "concluded in this window)")
         if args.require_swaps:
             print("trace_view: FAIL — retune swap decisions required",
+                  file=sys.stderr)
+            return 1
+
+    # -- radix sub-report: prefix-cache sharing the engine logged
+    counters = tracer.counters()
+    hits = [s.attrs for s in spans if s.name == "radix_hit"]
+    evicts = [s.attrs for s in spans if s.name == "radix_evict"]
+    lookups = int(counters.get("radix_lookups", 0))
+    n_hits = int(counters.get("radix_hits", len(hits)))
+    hit_tok = int(counters.get("radix_hit_tokens",
+                               sum(h.get("tokens", 0) for h in hits)))
+    ev_blocks = int(counters.get("radix_evicted_blocks",
+                                 sum(e.get("blocks", 0) for e in evicts)))
+    print(f"\n# radix: {n_hits}/{lookups or '?'} lookups hit, "
+          f"{hit_tok} prompt tokens served from shared blocks, "
+          f"{ev_blocks} blocks evicted across {len(evicts)} sweeps")
+    if hits:
+        print("rid,tokens,shared_blocks,tail")
+        for h in hits:
+            print(f"{h.get('rid')},{h.get('tokens')},"
+                  f"{h.get('shared_blocks')},{h.get('tail')}")
+    else:
+        print("(no radix_hit spans — prefix cache off, unshareable "
+              "family, or no prompt overlap in this window)")
+        if args.require_prefix_hits:
+            print("trace_view: FAIL — radix prefix-cache hits required",
                   file=sys.stderr)
             return 1
 
